@@ -1,0 +1,60 @@
+"""§Perf hillclimb driver: lower cell variants, extract roofline terms.
+
+Each entry: (tag, arch, shape, DeployCfg kwargs). Baselines already in
+.runs/dryrun; this writes .runs/perf_iters/<tag>.json for the
+EXPERIMENTS.md iteration log.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis as hlo
+from repro.launch import roofline as rl
+from repro.launch import steps
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import DeployCfg
+
+VARIANTS = [
+    # Cell A: granite-3-2b x train_4k — worst train-cell roofline,
+    # collective-bound by per-layer TP activation all-reduces.
+    ("granite_train4k_iter2_tp_none", "granite-3-2b", "train_4k",
+     dict(tp="none")),
+    # Cell B: yi-34b x decode_32k — most collective-bound decode
+    # (per-token FSDP weight re-gathers).
+    ("yi_decode32k_iter1_no_fsdp", "yi-34b", "decode_32k",
+     dict(fsdp=False)),
+    ("yi_decode32k_iter2_bf16", "yi-34b", "decode_32k",
+     dict(fsdp=False, serve_bf16=True)),
+]
+
+out_dir = ".runs/perf_iters"
+os.makedirs(out_dir, exist_ok=True)
+mesh = make_production_mesh()
+only = sys.argv[1:] if len(sys.argv) > 1 else None
+
+for tag, arch, shape, kw in VARIANTS:
+    if only and not any(o in tag for o in only):
+        continue
+    print(f"[hillclimb] {tag}", flush=True)
+    dep = DeployCfg(**kw)
+    try:
+        # run_cell but with the variant deploy: patch deploy_for lookup
+        orig = steps.deploy_for
+        steps.deploy_for = lambda a, s: dep
+        row = run_cell(arch, shape, mesh, "single_pod_16x16")
+        steps.deploy_for = orig
+        row["variant"] = kw
+    except Exception as e:
+        steps.deploy_for = orig
+        import traceback
+        traceback.print_exc()
+        row = {"status": "failed", "error": str(e)}
+    with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+        json.dump(row, f, indent=1, default=str)
+print("[hillclimb] done")

@@ -1,0 +1,16 @@
+import jax, time, json
+from repro.core.gson import EngineConfig, GSONEngine, GSONParams
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson import metrics
+
+cfg = EngineConfig(
+    params=GSONParams(model='soam', insertion_threshold=0.3),
+    capacity=2048, max_deg=16, variant='multi',
+    check_every=50, refresh_every=2, max_iterations=4000)
+eng = GSONEngine(cfg, make_sampler('sphere'))
+t0 = time.time()
+state, stats = eng.run(jax.random.key(42), verbose=True)
+print('converged', stats.converged, 'units', stats.units, 'conn', stats.connections)
+print('states', metrics.state_histogram(state))
+print('V,E,F,chi =', metrics.euler_characteristic(state))
+print('wall', time.time() - t0)

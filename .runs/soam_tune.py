@@ -1,0 +1,43 @@
+"""Edge-dynamics tuning: why doesn't SOAM converge? (see .runs log)
+
+Hypothesis H-soam-1: age_max=30 expires triangulation edges faster than
+(winner, second) refreshes re-arm them at multi-signal rates; average
+degree stalls ~2.5 << 6 and disks never form, so thresholds tighten and
+units over-insert to capacity. Prediction: raising age_max (and slowing
+the stuck-tightening) lifts average degree toward 6 and yields disk
+states.
+"""
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.gson import metrics
+from repro.core.gson.engine import EngineConfig, GSONEngine
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams
+
+results = []
+for age_max in (30.0, 64.0, 128.0):
+    cfg = EngineConfig(
+        params=GSONParams(model="soam", insertion_threshold=0.35,
+                          age_max=age_max, stuck_window=40),
+        capacity=768, max_deg=16, variant="multi",
+        check_every=25, refresh_every=2, max_iterations=1200)
+    eng = GSONEngine(cfg, make_sampler("sphere"))
+    t0 = time.time()
+    state, stats = eng.run(jax.random.key(42))
+    deg = float(np.sum(np.asarray(state.nbr) >= 0)
+                / max(int(state.n_active), 1))
+    hist = metrics.state_histogram(state)
+    v, e, f, chi = metrics.euler_characteristic(state)
+    row = dict(age_max=age_max, converged=stats.converged,
+               units=stats.units, edges=stats.connections,
+               avg_deg=round(deg, 2), chi=chi, states=hist,
+               iters=stats.iterations, wall=round(time.time() - t0, 1))
+    print(row, flush=True)
+    results.append(row)
+
+json.dump(results, open(".runs/soam_tune.json", "w"), indent=1)

@@ -1,0 +1,29 @@
+import json, time
+import jax, numpy as np
+from repro.core.gson import metrics
+from repro.core.gson.engine import EngineConfig, GSONEngine
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams
+
+results = []
+for (age_max, eps_b, surface) in [(64., .1, "sphere"), (96., .1, "sphere"),
+                                  (64., .05, "sphere"), (96., .1, "torus")]:
+    cfg = EngineConfig(
+        params=GSONParams(model="soam", insertion_threshold=0.35 if surface=="sphere" else 0.25,
+                          age_max=age_max, eps_b=eps_b, eps_n=eps_b/10,
+                          stuck_window=60),
+        capacity=768, max_deg=16, variant="multi",
+        check_every=50, refresh_every=2, max_iterations=4000)
+    eng = GSONEngine(cfg, make_sampler(surface))
+    t0 = time.time()
+    state, stats = eng.run(jax.random.key(42))
+    deg = float(np.sum(np.asarray(state.nbr) >= 0) / max(int(state.n_active), 1))
+    v, e, f, chi = metrics.euler_characteristic(state)
+    row = dict(age_max=age_max, eps_b=eps_b, surface=surface,
+               converged=stats.converged, units=stats.units,
+               edges=stats.connections, avg_deg=round(deg, 2), chi=chi,
+               states=metrics.state_histogram(state),
+               iters=stats.iterations, wall=round(time.time() - t0, 1))
+    print(row, flush=True)
+    results.append(row)
+json.dump(results, open(".runs/soam_tune2.json", "w"), indent=1, default=str)

@@ -1,0 +1,50 @@
+"""Beyond-paper: batched Update phase cost vs m (paper Sec. 4 future work).
+
+The paper parallelizes only Find Winners and reports Update becoming the
+new bottleneck on GPU (Fig. 8). Our Update IS batched (vectorized
+scatter algebra with deterministic collision resolution), so we measure
+its scaling with m: near-flat per-iteration cost until the scatter
+tables dominate, i.e. the phase the paper left sequential parallelizes
+with the same data-partitioning recipe.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.gson.multi import multi_signal_step
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams, init_state
+from repro.utils.timing import timed
+
+COLS = ["m", "t_step_us", "t_per_signal_us"]
+
+
+def run(ms=(64, 256, 1024, 4096, 8192), capacity=8192):
+    p = GSONParams(model="soam")
+    sampler = make_sampler("sphere")
+    st = init_state(jax.random.key(0), capacity=capacity, dim=3,
+                    max_deg=16,
+                    seed_points=sampler(jax.random.key(1), 1024))
+    import jax.numpy as jnp
+    st = st.replace(active=jnp.zeros((capacity,), bool)
+                    .at[:1024].set(True),
+                    n_active=jnp.asarray(1024, jnp.int32))
+    rows = []
+    for m in ms:
+        signals = sampler(jax.random.key(2), m)
+        step = lambda s: multi_signal_step(s, signals, p,
+                                           refresh_states=False)
+        _, t = timed(step, st, n=5, warmup=1)
+        rows.append({"m": m, "t_step_us": t * 1e6,
+                     "t_per_signal_us": t * 1e6 / m})
+    emit("bench_update_phase", rows, COLS)
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

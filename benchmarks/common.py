@@ -1,0 +1,87 @@
+"""Shared benchmark plumbing: engine runners + CSV/markdown emit.
+
+CPU-scale note: this container is one CPU core; the paper's hardware was
+a CPU + GT440 GPU. Benchmarks therefore run REDUCED workloads (smaller
+capacity, coarser insertion thresholds) whose purpose is (a) the paper's
+*behavioral* claims — signals-to-convergence ratios, phase shares —
+which are hardware-independent, and (b) relative per-signal costs of the
+four implementations. Absolute wall times are CPU-core times, not TPU
+projections; TPU-side performance is the §Roofline analysis.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.gson import metrics
+from repro.core.gson.engine import EngineConfig, GSONEngine
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams
+
+OUT_DIR = os.environ.get("BENCH_OUT", ".runs/bench")
+
+# per-surface insertion thresholds (the paper tunes exactly this knob
+# per mesh, Sec. 3.1); everything else shared
+SURFACE_THRESHOLDS = {
+    "sphere": 0.35,
+    "torus": 0.25,
+    "eight": 0.22,
+    "trefoil": 0.12,
+}
+
+
+def engine_for(surface: str, variant: str, *, capacity=768,
+               max_iterations=1200, age_max=64.0, fixed_m=None,
+               max_parallel=8192, find_winners=None) -> GSONEngine:
+    # eps/age/window tuned for convergence on this container's budget;
+    # the stable-edge crystallization (H-soam-2) does the heavy lifting
+    p = GSONParams(model="soam",
+                   insertion_threshold=SURFACE_THRESHOLDS[surface],
+                   age_max=age_max, eps_b=0.1, eps_n=0.01,
+                   stuck_window=60, max_parallel=max_parallel)
+    cfg = EngineConfig(
+        params=p, capacity=capacity, max_deg=16, variant=variant,
+        fixed_m=fixed_m, chunk=256, check_every=25, refresh_every=2,
+        max_iterations=max_iterations)
+    bbox = ((-3.0,) * 3, (3.0,) * 3)
+    return GSONEngine(cfg, make_sampler(surface), bbox=bbox,
+                      find_winners=find_winners)
+
+
+def run_one(surface: str, variant: str, seed=42, **kw) -> dict:
+    eng = engine_for(surface, variant, **kw)
+    t0 = time.time()
+    state, stats = eng.run(jax.random.key(seed))
+    row = stats.row()
+    v, e, f, chi = metrics.euler_characteristic(state)
+    row.update(surface=surface, variant=variant,
+               avg_degree=round(
+                   float(np.sum(np.asarray(state.nbr) >= 0))
+                   / max(stats.units, 1), 2),
+               effective_signals=stats.signals - stats.discarded,
+               qe=stats.quantization_error, chi=chi,
+               wall=round(time.time() - t0, 2))
+    row["states"] = metrics.state_histogram(state)
+    return row
+
+
+def emit(name: str, rows: list[dict], cols: list[str]):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    # markdown table to stdout
+    print(f"\n## {name}")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        print("| " + " | ".join(_fmt(r.get(c)) for c in cols) + " |")
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,70 @@
+"""Fig. 9 analog: per-signal Find Winners time + speed-up vs network size.
+
+Paper: per-signal time for Single / Indexed / GPU(multi) grows with N;
+speed-ups of Indexed and GPU over Single grow with N (165x at 15k units
+on their hardware). Here the 'parallel' implementation is the batched
+(m-signal) Find Winners — on CPU its win is vectorization; on TPU the
+same program is the MXU kernel. The *shape* of the curves (speed-up
+growing with N, indexed flattening) is the hardware-independent claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.gson.index import build_index, find_winners_indexed
+from repro.core.gson.multi import find_winners_reference
+from repro.core.gson.sampling import make_sampler
+from repro.utils.timing import timed
+
+COLS = ["units", "t_single_us", "t_indexed_us", "t_multi_us",
+        "speedup_indexed", "speedup_multi"]
+
+
+def bench_at_size(n_units: int, m: int = 1024, capacity: int = 16384):
+    sampler = make_sampler("sphere")
+    w = jnp.zeros((capacity, 3), jnp.float32).at[:n_units].set(
+        sampler(jax.random.key(1), n_units))
+    active = jnp.zeros((capacity,), bool).at[:n_units].set(True)
+    signals = sampler(jax.random.key(2), m)
+
+    # single-signal: one signal per call (jit'd), amortized over m calls
+    fw1 = jax.jit(find_winners_reference)
+    one = signals[:1]
+    _, t1 = timed(fw1, one, w, active, n=30, warmup=2)
+
+    # indexed single-signal
+    bbox_min = jnp.asarray([-3.0] * 3)
+    cell = jnp.asarray(6.0 / 24, jnp.float32)
+    idx = build_index(w, active, bbox_min, cell, (24, 24, 24))
+    fwi = jax.jit(lambda s, w, a: find_winners_indexed(idx, 24, s, w, a))
+    _, ti = timed(fwi, one, w, active, n=30, warmup=2)
+
+    # multi-signal batched (per-signal time = batch time / m)
+    fwm = jax.jit(find_winners_reference)
+    _, tm = timed(fwm, signals, w, active, n=10, warmup=2)
+    tm_per = tm / m
+
+    return {
+        "units": n_units,
+        "t_single_us": t1 * 1e6,
+        "t_indexed_us": ti * 1e6,
+        "t_multi_us": tm_per * 1e6,
+        "speedup_indexed": t1 / ti,
+        "speedup_multi": t1 / tm_per,
+    }
+
+
+def run(sizes=(250, 500, 1000, 2000, 4000, 8000, 16000)):
+    rows = [bench_at_size(n) for n in sizes]
+    emit("fig_per_signal", rows, COLS)
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fig. 2 / Fig. 8 analog: Find Winners share of step time vs network size.
+
+The paper's claim: Find Winners grows from ~50-60%% of runtime at 250-500
+units to 95%%+ as N grows (that dominance is what justifies parallelizing
+it). We measure the batched step's two phases separately at fixed m and
+growing active-unit count.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.gson.multi import (find_winners_reference,
+                                   multi_signal_step)
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams, init_state
+from repro.utils.timing import timed
+
+COLS = ["units", "m", "t_find_winners_us", "t_full_step_us",
+        "fw_share_pct"]
+
+
+def bench_at_size(n_units: int, m: int = 256, capacity: int = 8192):
+    p = GSONParams(model="soam")
+    sampler = make_sampler("sphere")
+    rng = jax.random.key(0)
+    st = init_state(rng, capacity=capacity, dim=3, max_deg=16,
+                    seed_points=sampler(jax.random.key(1), n_units))
+    st = st.replace(active=jnp.zeros((capacity,), bool)
+                    .at[:n_units].set(True),
+                    n_active=jnp.asarray(n_units, jnp.int32))
+    signals = sampler(jax.random.key(2), m)
+
+    fw = jax.jit(find_winners_reference)
+    _, t_fw = timed(fw, signals, st.w, st.active, n=20, warmup=2)
+    step = lambda s: multi_signal_step(s, signals, p,
+                                       refresh_states=False)
+    _, t_full = timed(step, st, n=5, warmup=1)
+    return {
+        "units": n_units, "m": m,
+        "t_find_winners_us": t_fw * 1e6,
+        "t_full_step_us": t_full * 1e6,
+        "fw_share_pct": 100.0 * t_fw / t_full,
+    }
+
+
+def run(sizes=(250, 500, 1000, 2000, 4000, 8000)):
+    rows = [bench_at_size(n) for n in sizes]
+    emit("fig_phase_times", rows, COLS)
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

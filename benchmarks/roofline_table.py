@@ -1,0 +1,60 @@
+"""Render the §Roofline table from dry-run artifacts (.runs/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+COLS = ["arch", "shape", "mesh", "t_compute", "t_memory", "t_collective",
+        "bottleneck", "useful_flops_frac", "roofline_frac", "mem_gib",
+        "resid_gib", "fits_hbm", "fits_analytic"]
+
+
+def load(run_dir=".runs/dryrun") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(run_dir, "*.json"))):
+        if "gson" in os.path.basename(f):
+            continue
+        d = json.load(open(f))
+        if d.get("status") == "skipped":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d["mesh"], "bottleneck": "skipped",
+                         "fits_hbm": "-"})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d["mesh"], "bottleneck": "FAILED"})
+            continue
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "t_compute": d["t_compute"], "t_memory": d["t_memory"],
+            "t_collective": d["t_collective"],
+            "bottleneck": d["bottleneck"],
+            "useful_flops_frac": d["useful_flops_frac"],
+            "roofline_frac": d["roofline_frac"],
+            "mem_gib": d["bytes_per_device"] / 2**30,
+            "resid_gib": d.get("residency", {}).get("total", 0) / 2**30,
+            "fits_hbm": d.get("fits_hbm"),
+            "fits_analytic": d.get("fits_hbm_analytic"),
+        })
+    return rows
+
+
+def run(run_dir=".runs/dryrun"):
+    rows = load(run_dir)
+    if not rows:
+        print("## roofline_table\n(no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun` first)")
+        return []
+    emit("roofline_table", rows, COLS)
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

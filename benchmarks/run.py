@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--budget quick|full]
+
+Outputs markdown tables to stdout and JSON to .runs/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=("quick", "full"))
+    ap.add_argument("--only", default=None,
+                    help="comma list: convergence,phase,per_signal,"
+                         "update,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("per_signal"):
+        from benchmarks import fig_per_signal
+        fig_per_signal.run()
+    if want("phase"):
+        from benchmarks import fig_phase_times
+        fig_phase_times.run()
+    if want("update"):
+        from benchmarks import bench_update_phase
+        bench_update_phase.run()
+    if want("convergence"):
+        from benchmarks import table_convergence
+        table_convergence.run(budget=args.budget)
+    if want("roofline"):
+        from benchmarks import roofline_table
+        roofline_table.run()
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

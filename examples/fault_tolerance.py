@@ -1,0 +1,80 @@
+"""Fault-tolerance demo: pod failure -> elastic restart -> exact resume.
+
+  PYTHONPATH=src python examples/fault_tolerance.py
+
+Trains a toy LM under the ElasticRunner, kills 'pod 1' mid-run, and
+shows the run restarting from the last checkpoint with one fewer pod —
+final loss matches the failure-free run exactly because the data stream
+is stateless-resumable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.tokens import synthetic_batch
+from repro.ft.elastic import ElasticRunner, FailureInjector
+from repro.models.common import ShapeCfg, rules_for_mesh
+from repro.models.registry import get_bundle, smoke_config
+from repro.launch.train import make_mesh_for_env
+from repro.launch import steps as steps_lib
+from repro.training import optimizer as opt_lib
+
+cfg = smoke_config(get_config("qwen1.5-0.5b"))
+bundle = get_bundle(cfg)
+shape = ShapeCfg("ft", 64, 8, "train")
+mesh = make_mesh_for_env()
+rules = rules_for_mesh(mesh)
+
+
+def build(n_pods, ckpt):
+    """(Re)build the train state for the surviving pod count. On a real
+    cluster this is where the smaller mesh is constructed; here the mesh
+    is 1 CPU device and n_pods scales the straggler-health vector."""
+    step_fn_inner, _, tcfg = steps_lib.build_train_step(
+        bundle, mesh, rules, steps_lib.DeployCfg(microbatches=1))
+    params = bundle.init(jax.random.key(0))
+    opt = opt_lib.init_opt_state(tcfg.opt, params)
+    state = {"params": params, "opt": opt}
+    if ckpt is not None and ckpt.latest() is not None:
+        state, step0, _ = ckpt.restore(state)
+        print(f"  [build] restored checkpoint at step {step0}, "
+              f"pods={n_pods}")
+
+    def step_fn(state, step, weights):
+        batch = synthetic_batch(cfg, shape, step=step, seed=0)
+        p, o, m = step_fn_inner(state["params"], state["opt"], batch)
+        if step % 5 == 0:
+            print(f"  step {step:3d} pods={n_pods} "
+                  f"loss={float(m['loss']):.4f} weights={weights}")
+        return {"params": p, "opt": o}
+
+    return state, step_fn
+
+
+def run(tag, injector, path):
+    ckpt = CheckpointManager(path, keep=2)
+    runner = ElasticRunner(build, ckpt, n_pods=2, ckpt_every=10,
+                           injector=injector)
+    final = runner.run(30)
+    loss_leaf = jax.tree.leaves(final["params"])[0]
+    print(f"[{tag}] restarts={runner.restarts} "
+          f"events={[e for e in runner.log if e['event']=='restart']}")
+    return final
+
+
+print("=== failure-free reference ===")
+ref = run("reference", FailureInjector(), ".runs/ft_demo_ref")
+print("\n=== pod 1 dies at step 17 ===")
+out = run("pod-loss", FailureInjector({17: "pod1_down"}),
+          ".runs/ft_demo_fail")
+
+same = all(
+    np.allclose(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])))
+print(f"\nfinal params identical to failure-free run: {same}")
+assert same, "elastic resume must reproduce the failure-free run"

@@ -1,0 +1,11 @@
+"""Batched serving example: wave-based continuous batching engine.
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 12 --batch 4
+
+The engine is the multi-signal idea applied to serving: the parallel
+axis is the number of in-flight requests, not the model size.
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""End-to-end driver for the paper's task: surface reconstruction.
+
+  PYTHONPATH=src python examples/surface_reconstruction.py \
+      --surface eight --variant multi --iters 1500 --out eight.obj
+
+Runs the chosen implementation (single / indexed / multi / kernel) to
+convergence, validates the reconstructed topology (Euler characteristic
+vs the surface's known genus), and exports the triangulation as a
+Wavefront .obj you can open in any mesh viewer.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.gson import metrics
+from repro.core.gson.engine import EngineConfig, GSONEngine
+from repro.core.gson.sampling import SURFACES, make_sampler
+from repro.core.gson.state import GSONParams
+from repro.kernels.find_winners.ops import make_pallas_find_winners
+
+GENUS = {"sphere": 0, "torus": 1, "eight": 2, "trefoil": 1}
+THRESH = {"sphere": 0.35, "torus": 0.25, "eight": 0.22, "trefoil": 0.12}
+
+
+def export_obj(state, path: str):
+    nbr = np.asarray(state.nbr)
+    active = np.asarray(state.active)
+    w = np.asarray(state.w)
+    ids = np.nonzero(active)[0]
+    remap = {int(u): i + 1 for i, u in enumerate(ids)}   # obj is 1-based
+    adj = {int(u): set(int(x) for x in nbr[u] if x >= 0) for u in ids}
+    faces = set()
+    for a in ids:
+        a = int(a)
+        for b in adj[a]:
+            if b <= a:
+                continue
+            for c in adj[a] & adj[b]:
+                if c > b:
+                    faces.add((a, b, c))
+    with open(path, "w") as f:
+        f.write("# repro multi-signal SOAM reconstruction\n")
+        for u in ids:
+            f.write(f"v {w[u, 0]:.6f} {w[u, 1]:.6f} {w[u, 2]:.6f}\n")
+        for a, b, c in sorted(faces):
+            f.write(f"f {remap[a]} {remap[b]} {remap[c]}\n")
+    return len(ids), len(faces)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--surface", default="sphere", choices=SURFACES)
+    ap.add_argument("--variant", default="multi",
+                    choices=("single", "indexed", "multi", "kernel"))
+    ap.add_argument("--iters", type=int, default=800)
+    ap.add_argument("--capacity", type=int, default=768)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--out", default=None, help="export .obj path")
+    args = ap.parse_args(argv)
+
+    fw = None
+    variant = args.variant
+    if variant == "kernel":
+        fw = make_pallas_find_winners(interpret=True)
+        variant = "multi"
+
+    cfg = EngineConfig(
+        params=GSONParams(model="soam",
+                          insertion_threshold=THRESH[args.surface],
+                          age_max=64.0, eps_b=0.1, eps_n=0.01,
+                          stuck_window=60),
+        capacity=args.capacity, max_deg=16, variant=variant,
+        check_every=25, refresh_every=2, max_iterations=args.iters)
+    eng = GSONEngine(cfg, make_sampler(args.surface), find_winners=fw)
+    state, stats = eng.run(jax.random.key(args.seed), verbose=True)
+
+    v, e, f, chi = metrics.euler_characteristic(state)
+    expect_chi = 2 - 2 * GENUS[args.surface]
+    print(f"\n{args.surface} via {args.variant}: converged="
+          f"{stats.converged} units={stats.units} edges={e} faces={f}")
+    print(f"Euler characteristic {chi} (target {expect_chi}, genus "
+          f"{GENUS[args.surface]})  signals={stats.signals} "
+          f"discarded={stats.discarded}")
+    print(f"phase times: sample {stats.time_sample:.1f}s  "
+          f"step {stats.time_step:.1f}s  "
+          f"convergence-check {stats.time_convergence:.1f}s")
+    if args.out:
+        nv, nf = export_obj(state, args.out)
+        print(f"wrote {args.out}: {nv} vertices, {nf} faces")
+
+
+if __name__ == "__main__":
+    main()

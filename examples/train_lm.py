@@ -1,0 +1,92 @@
+"""End-to-end LM training driver on the production substrate.
+
+  # ~20M-param granite-family model, a few hundred steps on CPU:
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+
+  # the full assigned config (TPU pod): drop --preset
+  PYTHONPATH=src python examples/train_lm.py --arch yi-34b --full
+
+Demonstrates: config system -> model registry -> sharded train step ->
+synthetic-but-learnable data stream -> async checkpointing -> resume.
+The loss falling to the Markov chain's conditional entropy (well below
+log V) is the end-to-end correctness signal.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.tokens import TokenStream, synthetic_batch
+from repro.launch import steps as steps_lib
+from repro.launch.train import make_mesh_for_env
+from repro.models.common import ShapeCfg, rules_for_mesh
+from repro.models.registry import get_bundle, smoke_config
+from repro.training import optimizer as opt_lib
+
+PRESET = dict(n_layers=8, d_model=384, d_head=64, n_heads=6, n_kv=2,
+              d_ff=1024, vocab=4096, remat="none", attn_chunk=128)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the exact assigned config (TPU-scale)")
+    ap.add_argument("--ckpt-dir", default=".runs/train_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        import jax.numpy as jnp
+        cfg = cfg.replace(param_dtype=jnp.float32,
+                          compute_dtype=jnp.float32, **PRESET)
+    bundle = get_bundle(cfg)
+    mesh = make_mesh_for_env()
+    rules = rules_for_mesh(mesh)
+    dep = steps_lib.DeployCfg(microbatches=1, lr=args.lr)
+    step, _, tcfg = steps_lib.build_train_step(bundle, mesh, rules, dep)
+
+    params = bundle.init(jax.random.key(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    opt = opt_lib.init_opt_state(tcfg.opt, params)
+    shape = ShapeCfg("train_lm", args.seq, args.batch, "train")
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and ckpt.latest() is not None:
+        (params, opt), start, _ = ckpt.restore((params, opt))
+        print(f"resumed from step {start}")
+
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, mesh {dict(mesh.shape)}, "
+          f"seq {args.seq} batch {args.batch}")
+    import math
+    print(f"log(vocab) = {math.log(cfg.vocab):.3f} — loss must drop "
+          f"well below this")
+    t0, losses = time.time(), []
+    for i in range(start, start + args.steps):
+        batch = synthetic_batch(cfg, shape, step=i, seed=0)
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % 10 == 0:
+            dt = (time.time() - t0) / 10
+            print(f"step {i+1:4d}  loss {losses[-1]:.4f}  "
+                  f"({dt:.2f}s/step)")
+            t0 = time.time()
+        if (i + 1) % 50 == 0:
+            ckpt.save_async((params, opt), i + 1)
+    ckpt.wait()
+    print(f"\nfirst-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

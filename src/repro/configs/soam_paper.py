@@ -1,0 +1,21 @@
+"""The paper's own configuration: SOAM surface reconstruction.
+
+Multi-signal variant, m capped at 8192 (paper Sec. 3.1), insertion
+threshold per-surface; production deployment is data-partitioned over
+(pod, data) with the unit pool replicated (see core/gson/distributed.py).
+"""
+from repro.core.gson.state import GSONParams
+
+config = GSONParams(
+    model="soam",
+    eps_b=0.05,
+    eps_n=0.005,
+    age_max=30.0,
+    insertion_threshold=0.25,
+    max_parallel=8192,
+)
+
+# production-scale pool for the dry-run: 64k units cap, degree 16
+CAPACITY = 65536 // 2
+MAX_DEG = 16
+DIM = 3

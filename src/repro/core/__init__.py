@@ -1,0 +1,3 @@
+"""Core — the paper's contribution: multi-signal growing self-organizing
+networks with winner-lock collision resolution, plus the single-signal /
+indexed baselines and distributed (shard_map) deployments."""

@@ -1,0 +1,188 @@
+"""Host-side driver for growing self-organizing network runs.
+
+Implements the paper's experimental protocol:
+  * multi-signal runs use m = smallest power of two > current unit count,
+    capped at ``params.max_parallel`` (8192 in the paper) — bucketing m
+    keeps the number of distinct jit signatures <= log2(cap);
+  * single-signal runs scan signals one at a time in chunks;
+  * SOAM terminates on the topology criterion (all units disk/patch),
+    GNG/GWR on a quantization-error threshold against probe signals;
+  * per-phase wall times (Sample / Find Winners+Update / Convergence) and
+    convergence statistics are recorded for the benchmark tables.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gson import metrics
+from repro.core.gson.index import indexed_single_signal_scan
+from repro.core.gson.multi import (multi_signal_step, refresh_topology,
+                                   soam_converged)
+from repro.core.gson.single import single_signal_scan
+from repro.core.gson.state import GSONParams, init_state
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(int(n), 1).bit_length()
+
+
+@dataclass
+class RunStats:
+    iterations: int = 0
+    signals: int = 0
+    discarded: int = 0
+    units: int = 0
+    connections: int = 0
+    converged: bool = False
+    quantization_error: float = float("nan")
+    time_total: float = 0.0
+    time_sample: float = 0.0
+    time_step: float = 0.0        # Find Winners + Update (fused under jit)
+    time_convergence: float = 0.0
+    history: list = field(default_factory=list)
+
+    def row(self) -> dict:
+        d = self.__dict__.copy()
+        d.pop("history")
+        return d
+
+
+@dataclass
+class EngineConfig:
+    params: GSONParams = GSONParams()
+    capacity: int = 4096
+    max_deg: int = 16
+    dim: int = 3
+    variant: str = "multi"        # "multi" | "single" | "indexed"
+    fixed_m: int | None = None    # override the paper's m schedule
+    chunk: int = 256              # signals per device call in single/indexed
+    check_every: int = 10         # iterations between convergence checks
+    refresh_every: int = 5        # multi-signal topo refresh cadence (iters)
+    single_refresh_every: int = 200   # per-signal cadence inside scans
+    max_iterations: int = 100_000
+    max_signals: int = 50_000_000
+    qe_threshold: float = 1e-3    # GNG/GWR convergence
+    n_probe: int = 2048
+    grid_per_axis: int = 24
+    per_cell_cap: int = 24
+    index_rebuild_every: int = 64
+    min_m: int = 4
+
+
+class GSONEngine:
+    """Runs one (variant, model, surface) experiment to convergence."""
+
+    def __init__(self, config: EngineConfig, sampler, find_winners=None,
+                 bbox=((-3.0,) * 3, (3.0,) * 3)):
+        self.cfg = config
+        self.sampler = sampler
+        self.find_winners = find_winners
+        self.bbox = (np.asarray(bbox[0], np.float32),
+                     np.asarray(bbox[1], np.float32))
+
+    def _m_schedule(self, n_active: int) -> int:
+        cfg = self.cfg
+        if cfg.fixed_m is not None:
+            return cfg.fixed_m
+        return max(cfg.min_m,
+                   min(next_pow2(n_active), cfg.params.max_parallel))
+
+    def _converged(self, state, probes) -> tuple[bool, float, object]:
+        p = self.cfg.params
+        if p.model == "soam":
+            state = refresh_topology(state, p)
+            ok = bool(soam_converged(state))
+            qe = float(metrics.quantization_error(state, probes))
+            return ok, qe, state
+        qe = float(metrics.quantization_error(state, probes))
+        return (qe < self.cfg.qe_threshold
+                and int(state.n_active) > 8), qe, state
+
+    def run(self, rng: jax.Array, verbose: bool = False):
+        cfg, p = self.cfg, self.cfg.params
+        rng, k_init, k_probe, k_seed = jax.random.split(rng, 4)
+        seed_pts = self.sampler(k_seed, 2)
+        state = init_state(
+            k_init, capacity=cfg.capacity, dim=cfg.dim,
+            max_deg=cfg.max_deg, seed_points=seed_pts,
+            init_threshold=p.insertion_threshold)
+        probes = self.sampler(k_probe, cfg.n_probe)
+
+        stats = RunStats()
+        t_start = time.perf_counter()
+        it = 0
+        while (it < cfg.max_iterations
+               and int(state.signal_count) < cfg.max_signals):
+            n_act = int(state.n_active)
+            # ---- Sample ----
+            t0 = time.perf_counter()
+            rng, k_sig = jax.random.split(rng)
+            if cfg.variant == "multi":
+                m = self._m_schedule(n_act)
+            else:
+                m = cfg.chunk
+            signals = self.sampler(k_sig, m)
+            signals.block_until_ready()
+            stats.time_sample += time.perf_counter() - t0
+
+            # ---- Find Winners + Update ----
+            t0 = time.perf_counter()
+            if cfg.variant == "multi":
+                refresh = (p.model == "soam"
+                           and it % cfg.refresh_every == 0)
+                state = multi_signal_step(
+                    state, signals, p, refresh_states=refresh,
+                    find_winners=self.find_winners)
+            elif cfg.variant == "single":
+                state = single_signal_scan(
+                    state, signals, p,
+                    refresh_every=cfg.single_refresh_every,
+                    find_winners=self.find_winners)
+            elif cfg.variant == "indexed":
+                state = indexed_single_signal_scan(
+                    state, signals, p, self.bbox[0], self.bbox[1],
+                    grid_per_axis=cfg.grid_per_axis,
+                    per_cell_cap=cfg.per_cell_cap,
+                    rebuild_every=cfg.index_rebuild_every,
+                    refresh_every=cfg.single_refresh_every)
+            else:
+                raise ValueError(cfg.variant)
+            state.w.block_until_ready()
+            stats.time_step += time.perf_counter() - t0
+
+            it += 1
+            # ---- Convergence check ----
+            if it % cfg.check_every == 0:
+                t0 = time.perf_counter()
+                done, qe, state = self._converged(state, probes)
+                stats.time_convergence += time.perf_counter() - t0
+                stats.history.append({
+                    "iteration": it,
+                    "units": int(state.n_active),
+                    "signals": int(state.signal_count),
+                    "qe": qe,
+                })
+                if verbose:
+                    h = stats.history[-1]
+                    print(f"  it={h['iteration']:6d} units={h['units']:6d} "
+                          f"signals={h['signals']:9d} qe={h['qe']:.5f}")
+                if done:
+                    stats.converged = True
+                    stats.quantization_error = qe
+                    break
+
+        stats.iterations = it
+        stats.signals = int(state.signal_count)
+        stats.discarded = int(state.discarded)
+        stats.units = int(state.n_active)
+        stats.connections = metrics.edge_count(state)
+        stats.time_total = time.perf_counter() - t_start
+        if np.isnan(stats.quantization_error):
+            stats.quantization_error = float(
+                metrics.quantization_error(state, probes))
+        return state, stats

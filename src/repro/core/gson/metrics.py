@@ -1,0 +1,68 @@
+"""Quality / faithfulness metrics for reconstructed networks.
+
+Euler characteristic and genus are host-side (numpy) reporting utilities:
+for a converged SOAM triangulation V - E + F must equal 2 - 2*genus of
+the sampled surface — the strongest faithfulness check available.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gson.state import STATE_NAMES, NetworkState
+
+
+def quantization_error(state: NetworkState, probes: jax.Array) -> jax.Array:
+    """Mean squared distance from probe signals to their winner."""
+    x2 = jnp.sum(probes * probes, axis=1, keepdims=True)
+    w2 = jnp.sum(state.w * state.w, axis=1)
+    d2 = x2 - 2.0 * probes @ state.w.T + w2[None, :]
+    d2 = jnp.where(state.active[None, :], d2, jnp.inf)
+    return jnp.mean(jnp.maximum(jnp.min(d2, axis=1), 0.0))
+
+
+def edge_count(state: NetworkState) -> int:
+    return int(np.sum(np.asarray(state.nbr) >= 0)) // 2
+
+
+def state_histogram(state: NetworkState) -> dict:
+    st = np.asarray(state.topo_state)
+    act = np.asarray(state.active)
+    return {name: int(np.sum(act & (st == i)))
+            for i, name in enumerate(STATE_NAMES)}
+
+
+def euler_characteristic(state: NetworkState) -> tuple[int, int, int, int]:
+    """(V, E, F, chi) from the neighbor lists; F = 3-cliques."""
+    nbr = np.asarray(state.nbr)
+    active = np.asarray(state.active)
+    ids = np.nonzero(active)[0]
+    v = len(ids)
+    adj = {int(i): set(int(j) for j in nbr[i] if j >= 0) for i in ids}
+    e = sum(len(s) for s in adj.values()) // 2
+    f = 0
+    for a, nb in adj.items():
+        for b in nb:
+            if b <= a:
+                continue
+            f += len([c for c in (adj[a] & adj[b]) if c > b])
+    chi = v - e + f
+    return v, e, f, chi
+
+
+def genus(state: NetworkState) -> float:
+    _, _, _, chi = euler_characteristic(state)
+    return (2 - chi) / 2.0
+
+
+def summary(state: NetworkState) -> dict:
+    return {
+        "units": int(state.n_active),
+        "edges": edge_count(state),
+        "signals": int(state.signal_count),
+        "discarded": int(state.discarded),
+        "dropped_edges": int(state.dropped_edges),
+        "dropped_units": int(state.dropped_units),
+        "states": state_histogram(state),
+    }

@@ -1,0 +1,314 @@
+"""The paper's multi-signal iteration (Sec. 2.2/2.5), TPU-native.
+
+One call processes m >> 1 signals at once:
+
+  1. Find Winners  — batched top-2 nearest-unit search (pluggable backend:
+     pure-jnp reference, Pallas MXU kernel, hash-grid, shard_map).
+  2. Winner lock   — among signals sharing a winner, exactly one (uniform
+     random priority) survives; the rest are *discarded* (paper Sec. 2.2).
+     Implemented as a deterministic scatter-min over unique priorities.
+  3. Update        — adaptation + structural changes, fully vectorized
+     (the paper leaves Update parallelization as future work; doing it
+     batched while preserving the winner-lock semantics is this repo's
+     beyond-paper extension — see EXPERIMENTS.md §Perf).
+
+Supports the three published models: GNG (Fritzke 95), GWR (Marsland 02)
+and SOAM (Piastra 12). The single-signal reference algorithm is this step
+at m=1 (see single.py), which makes the coherence between variants
+directly testable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gson import topology as topo
+from repro.core.gson.state import DISK, SINGULAR, GSONParams, NetworkState
+
+_BIG32 = jnp.iinfo(jnp.int32).max
+
+FindWinnersFn = Callable[[jax.Array, jax.Array, jax.Array],
+                         tuple[jax.Array, jax.Array, jax.Array, jax.Array]]
+
+
+def find_winners_reference(signals: jax.Array, w: jax.Array,
+                           active: jax.Array):
+    """Pure-jnp batched top-2 nearest units.
+
+    dist^2 = |x|^2 - 2 x.w + |w|^2 on the MXU-friendly matmul form.
+    Top-2 via two masked-min passes (O(mC); ``lax.top_k`` sorts the
+    whole row, which dominated step time in profiling — same
+    first-lowest-id tie semantics). Returns
+    (winner_ids, second_ids, d2_winner, d2_second).
+    """
+    x2 = jnp.sum(signals * signals, axis=1, keepdims=True)        # (m, 1)
+    w2 = jnp.sum(w * w, axis=1)                                   # (C,)
+    d2 = x2 - 2.0 * signals @ w.T + w2[None, :]                   # (m, C)
+    d2 = jnp.where(active[None, :], d2, jnp.inf)
+    wid = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    d2b = jnp.take_along_axis(d2, wid[:, None], axis=1)[:, 0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2m = jnp.where(cols == wid[:, None], jnp.inf, d2)
+    sid = jnp.argmin(d2m, axis=1).astype(jnp.int32)
+    d2s = jnp.take_along_axis(d2m, sid[:, None], axis=1)[:, 0]
+    # degenerate (<2 active): duplicate the winner
+    invalid = ~jnp.isfinite(d2s)
+    sid = jnp.where(invalid, wid, sid)
+    d2s = jnp.where(invalid, d2b, d2s)
+    return (wid, sid, jnp.maximum(d2b, 0.0), jnp.maximum(d2s, 0.0))
+
+
+def winner_lock(rng: jax.Array, winner_ids: jax.Array, capacity: int):
+    """Paper's collision rule: one surviving signal per distinct winner.
+
+    Uses unique random priorities + scatter-min: deterministic, and the
+    survivor is uniformly random among colliding signals — matching the
+    'first incoming signal, in a random order' semantics of the paper.
+    """
+    m = winner_ids.shape[0]
+    prio = jax.random.permutation(rng, m).astype(jnp.int32)
+    best = jnp.full((capacity,), _BIG32, jnp.int32).at[winner_ids].min(prio)
+    return prio == best[winner_ids], prio
+
+
+def refresh_topology(state: NetworkState, params: GSONParams) -> NetworkState:
+    """Recompute the SOAM state ladder + adapt per-unit insertion
+    thresholds toward the local feature size (tighten while stuck
+    non-disk, relax once locally stable)."""
+    topo_state = topo.compute_topo_states(
+        state.nbr, state.active, state.firing, params.firing_threshold)
+    habituated = state.firing < params.firing_threshold
+    stable = (topo_state >= DISK) & (topo_state != SINGULAR)
+    stuck = state.active & habituated & ~stable
+    inconsistent = jnp.where(stuck, state.inconsistent_for + 1, 0)
+    tighten = inconsistent >= params.stuck_window
+    thr_min = params.insertion_threshold * params.thr_min_frac
+    threshold = jnp.where(
+        tighten,
+        jnp.maximum(state.threshold * params.thr_decay, thr_min),
+        state.threshold)
+    inconsistent = jnp.where(tighten, 0, inconsistent)
+    threshold = jnp.where(
+        state.active & stable,
+        jnp.minimum(threshold * params.thr_recover,
+                    params.insertion_threshold),
+        threshold)
+    return state.replace(topo_state=topo_state, threshold=threshold,
+                         inconsistent_for=inconsistent)
+
+
+def multi_signal_step_impl(
+    state: NetworkState,
+    signals: jax.Array,
+    params: GSONParams,
+    refresh_states: bool = True,
+    find_winners: FindWinnersFn | None = None,
+) -> NetworkState:
+    """One multi-signal iteration. ``signals``: (m, dim) float32.
+
+    Un-jitted implementation — compose freely inside scans / shard_map.
+    ``multi_signal_step`` below is the jitted entry point.
+    """
+    if find_winners is None:
+        find_winners = find_winners_reference
+    C, K = state.capacity, state.max_deg
+    m = signals.shape[0]
+    is_gng = params.model == "gng"
+    is_soam = params.model == "soam"
+
+    rng, k_lock = jax.random.split(state.rng)
+
+    # ---- 1. Find Winners -------------------------------------------------
+    wid, sid, d2b, _ = find_winners(signals, state.w, state.active)
+
+    # ---- 2. winner lock --------------------------------------------------
+    selected, prio = winner_lock(k_lock, wid, C)
+    n_sel = jnp.sum(selected).astype(jnp.int32)
+    dist_b = jnp.sqrt(d2b)
+
+    sel_w = jnp.where(selected, wid, C)          # sentinel -> scatter drop
+
+    # ---- 3a. insertion decision (GWR/SOAM: distance + habituation) -------
+    if is_gng:
+        ins = jnp.zeros((m,), bool)
+    else:
+        ins = (selected
+               & (dist_b > state.threshold[jnp.clip(wid, 0, C - 1)])
+               & (state.firing[jnp.clip(wid, 0, C - 1)]
+                  < params.firing_threshold))
+    adapt = selected if is_gng else (selected & ~ins)
+
+    # ---- 3b. adaptation of winner + neighbors ----------------------------
+    # SOAM: topologically stable units (disk/patch) are frozen in place so
+    # the rest of the mesh can settle (Piastra 12).
+    w = state.w
+    firing = state.firing
+    if is_soam and params.freeze_stable:
+        stable_u = (state.topo_state >= DISK) & (state.topo_state != SINGULAR)
+    else:
+        stable_u = jnp.zeros((C,), bool)
+    h_b = firing[jnp.clip(wid, 0, C - 1)]
+    scale_b = params.eps_b * (jnp.ones_like(h_b) if is_gng else h_b)
+    scale_b = jnp.where(stable_u[jnp.clip(wid, 0, C - 1)], 0.0, scale_b)
+    delta_b = scale_b[:, None] * (signals - w[jnp.clip(wid, 0, C - 1)])
+    w = w.at[jnp.where(adapt, wid, C)].add(delta_b, mode="drop")
+
+    nb = state.nbr[jnp.clip(wid, 0, C - 1)]                     # (m, K)
+    nb_valid = (nb >= 0) & adapt[:, None]
+    nb_safe = jnp.clip(nb, 0, C - 1)
+    h_n = firing[nb_safe]
+    scale_n = params.eps_n * (jnp.ones_like(h_n) if is_gng else h_n)
+    scale_n = jnp.where(stable_u[nb_safe], 0.0, scale_n)
+    delta_n = scale_n[..., None] * (signals[:, None, :] - w[nb_safe])
+    delta_n = jnp.where(nb_valid[..., None], delta_n, 0.0)
+    if params.neighbor_collision == "sum":
+        w = w.at[jnp.where(nb_valid, nb, C)].add(delta_n, mode="drop")
+    else:  # "last": GPU write-race emulation — one survivor per target row
+        flat_nb = jnp.where(nb_valid, nb, C).reshape(-1)
+        flat_prio = jnp.broadcast_to(prio[:, None], nb.shape).reshape(-1)
+        best_n = jnp.full((C,), _BIG32, jnp.int32).at[flat_nb].min(
+            flat_prio, mode="drop")
+        keep = (flat_prio == best_n[jnp.clip(flat_nb, 0, C - 1)])
+        tgt = jnp.where(keep & (flat_nb < C), flat_nb, C)
+        w = w.at[tgt].add(delta_n.reshape(-1, w.shape[1]), mode="drop")
+
+    # ---- 3c. habituation (GWR/SOAM) --------------------------------------
+    if not is_gng:
+        dec_b = params.tau_b * (h_b - params.h_min)
+        firing = firing.at[jnp.where(adapt, wid, C)].add(-dec_b, mode="drop")
+        dec_n = params.tau_n * (h_n - params.h_min)
+        dec_n = jnp.where(nb_valid, dec_n, 0.0)
+        firing = firing.at[jnp.where(nb_valid, nb, C)].add(
+            -dec_n, mode="drop")
+        firing = jnp.clip(firing, params.h_min, 1.0)
+
+    # ---- 3d. GNG error bookkeeping ---------------------------------------
+    error = state.error
+    if is_gng:
+        error = error.at[sel_w].add(d2b, mode="drop")
+
+    # ---- 3e. edge aging on winner rows (distinct winners post-lock) ------
+    # stable-stable edges are protected from aging (SOAM crystallization)
+    age = topo.age_incident_edges(state.nbr, state.age, wid, selected,
+                                  protect=stable_u)
+    nbr = state.nbr
+
+    # ---- 3f. GWR/SOAM unit insertion -------------------------------------
+    active = state.active
+    threshold = state.threshold
+    topo_state = state.topo_state
+    inconsistent = state.inconsistent_for
+    n_active = state.n_active
+    dropped_units = state.dropped_units
+
+    free_order = jnp.argsort(active, stable=True)       # inactive first
+    n_free = C - n_active
+
+    if not is_gng:
+        rank = jnp.cumsum(ins.astype(jnp.int32)) - 1
+        fits = ins & (rank < n_free)
+        dropped_units = dropped_units + jnp.sum(ins & ~fits)
+        new_id = jnp.where(fits, free_order[jnp.clip(rank, 0, C - 1)], C)
+        w_new = 0.5 * (w[jnp.clip(wid, 0, C - 1)] + signals)
+        w = w.at[new_id].set(w_new, mode="drop")
+        active = active.at[new_id].set(True, mode="drop")
+        firing = firing.at[new_id].set(1.0, mode="drop")
+        error = error.at[new_id].set(0.0, mode="drop")
+        threshold = threshold.at[new_id].set(
+            threshold[jnp.clip(wid, 0, C - 1)], mode="drop")
+        topo_state = topo_state.at[new_id].set(0, mode="drop")
+        inconsistent = inconsistent.at[new_id].set(0, mode="drop")
+        n_active = n_active + jnp.sum(fits).astype(jnp.int32)
+
+        # edges: (new, b) and (new, s); drop (b, s)
+        e_a = jnp.concatenate([new_id, new_id])
+        e_b = jnp.concatenate([wid, sid])
+        e_m = jnp.concatenate([fits, fits])
+        nbr, age, d1 = topo.insert_edges(nbr, age, e_a, e_b, e_m)
+        nbr, age = topo.remove_edge_pairs(nbr, age, wid, sid, fits)
+        # refresh/insert (b, s) for adapting signals
+        nbr, age, d2_ = topo.insert_edges(nbr, age, wid, sid, adapt)
+        dropped_edges = state.dropped_edges + d1 + d2_
+    else:
+        nbr, age, d2_ = topo.insert_edges(nbr, age, wid, sid, selected)
+        dropped_edges = state.dropped_edges + d2_
+
+    # ---- 3g. GNG periodic insertion at max-error units -------------------
+    eff_old = state.signal_count - state.discarded
+    eff_new = eff_old + n_sel
+    if is_gng:
+        k_cap = 8  # static cap on inserts per iteration
+        n_ins = (eff_new // params.gng_lambda) - (eff_old // params.gng_lambda)
+        n_ins = jnp.clip(n_ins, 0, k_cap)
+        err_masked = jnp.where(active, error, -jnp.inf)
+        _, q_ids = jax.lax.top_k(err_masked, k_cap)
+        q_ids = q_ids.astype(jnp.int32)
+        take = jnp.arange(k_cap) < n_ins
+        # worst neighbor f of each q
+        q_nb = nbr[q_ids]                                  # (k, K)
+        q_nb_err = jnp.where(q_nb >= 0,
+                             error[jnp.clip(q_nb, 0, C - 1)], -jnp.inf)
+        f_slot = jnp.argmax(q_nb_err, axis=1)
+        f_ids = q_nb[jnp.arange(k_cap), f_slot]
+        take = take & (f_ids >= 0)
+        rank = jnp.cumsum(take.astype(jnp.int32)) - 1
+        fits = take & (rank < n_free)
+        dropped_units = dropped_units + jnp.sum(take & ~fits)
+        new_id = jnp.where(fits, free_order[jnp.clip(rank, 0, C - 1)], C)
+        f_safe = jnp.clip(f_ids, 0, C - 1)
+        w_new = 0.5 * (w[q_ids] + w[f_safe])
+        w = w.at[new_id].set(w_new, mode="drop")
+        active = active.at[new_id].set(True, mode="drop")
+        firing = firing.at[new_id].set(1.0, mode="drop")
+        n_active = n_active + jnp.sum(fits).astype(jnp.int32)
+        # error redistribution
+        error = error.at[jnp.where(fits, q_ids, C)].multiply(
+            params.gng_alpha, mode="drop")
+        error = error.at[jnp.where(fits, f_ids, C)].multiply(
+            params.gng_alpha, mode="drop")
+        error = error.at[new_id].set(
+            params.gng_alpha * error[q_ids], mode="drop")
+        e_a = jnp.concatenate([new_id, new_id])
+        e_b = jnp.concatenate([q_ids, f_ids])
+        e_m = jnp.concatenate([fits, fits])
+        nbr, age, d3 = topo.insert_edges(nbr, age, e_a, e_b, e_m)
+        nbr, age = topo.remove_edge_pairs(nbr, age, q_ids, f_ids, fits)
+        dropped_edges = dropped_edges + d3
+        # global error decay, once per effective signal
+        error = error * (1.0 - params.gng_beta) ** n_sel
+
+    # ---- 3h. expiry + pruning --------------------------------------------
+    nbr, age, _ = topo.expire_edges(nbr, age, params.age_max)
+    active, _ = topo.prune_isolated(active, nbr, firing)
+    n_active = jnp.sum(active).astype(jnp.int32)
+    nbr = jnp.where(active[:, None], nbr, jnp.int32(-1))
+    nbr, age = topo.drop_edges_to_inactive(nbr, age, active)
+
+    out = state.replace(
+        w=w, active=active, nbr=nbr, age=age, error=error, firing=firing,
+        threshold=threshold, topo_state=topo_state,
+        inconsistent_for=inconsistent, n_active=n_active,
+        signal_count=state.signal_count + m,
+        discarded=state.discarded + (m - n_sel),
+        dropped_edges=dropped_edges, dropped_units=dropped_units, rng=rng,
+    )
+    # ---- 3i. SOAM: topology states + adaptive insertion threshold --------
+    if is_soam and refresh_states:
+        out = refresh_topology(out, params)
+    return out
+
+
+multi_signal_step = jax.jit(
+    multi_signal_step_impl,
+    static_argnames=("params", "refresh_states", "find_winners"))
+
+
+def soam_converged(state: NetworkState) -> jax.Array:
+    """Paper's termination: every unit's neighborhood is a (patch of a)
+    disk — threshold-free. Requires a fresh ``topo_state``."""
+    stable = ((state.topo_state == DISK) | (state.topo_state == DISK + 1))
+    return jnp.all(jnp.where(state.active, stable, True)) & (
+        state.n_active >= 4)

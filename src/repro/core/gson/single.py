@@ -1,0 +1,47 @@
+"""Single-signal reference algorithm (the paper's sequential baseline).
+
+By construction the single-signal algorithm *is* the multi-signal step at
+m=1 (the winner lock always selects the lone signal), so this module
+scans the shared step implementation over a stream of signals one by one.
+This makes the coherence between the two variants — a design goal the
+paper states explicitly — directly testable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gson.multi import (FindWinnersFn, multi_signal_step,
+                                   refresh_topology)
+from repro.core.gson.state import GSONParams, NetworkState
+
+
+@partial(jax.jit, static_argnames=("params", "refresh_every",
+                                   "find_winners"))
+def single_signal_scan(
+    state: NetworkState,
+    signals: jax.Array,
+    params: GSONParams,
+    refresh_every: int = 50,
+    find_winners: FindWinnersFn | None = None,
+) -> NetworkState:
+    """Process ``signals`` (n, dim) strictly one at a time."""
+    is_soam = params.model == "soam"
+
+    def body(carry, xs):
+        st, i = carry
+        sig = xs[None, :]
+        st = multi_signal_step(st, sig, params, refresh_states=False,
+                               find_winners=find_winners)
+        if is_soam:
+            st = jax.lax.cond(
+                (i + 1) % refresh_every == 0,
+                lambda s: refresh_topology(s, params),
+                lambda s: s,
+                st)
+        return (st, i + 1), None
+
+    (state, _), _ = jax.lax.scan(body, (state, jnp.int32(0)), signals)
+    return state

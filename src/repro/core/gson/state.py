@@ -1,0 +1,149 @@
+"""Static-capacity network state for growing self-organizing networks.
+
+JAX requires static shapes, so the *growing* network lives in a fixed
+capacity pool of ``capacity`` unit slots. Growth activates free slots,
+removal deactivates them. All invariants (symmetric neighbor lists,
+symmetric ages, no self edges) are maintained by the ops in
+``topology.py`` and checked by ``tests/test_gson_invariants.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel for "no neighbor" in fixed-degree neighbor lists.
+NO_NBR = jnp.int32(-1)
+
+# SOAM topological state ladder (Piastra 2012, simplified faithfully).
+ACTIVE = 0      # fresh unit
+HABITUATED = 1  # firing counter below habituation threshold
+CONNECTED = 2   # every neighbor shares >=1 edge inside the neighborhood
+HALF_DISK = 3   # neighborhood link-graph is a simple path
+DISK = 4        # neighborhood link-graph is a single cycle
+PATCH = 5       # disk, and all neighbors are disk/patch
+SINGULAR = 6    # degree exhausted / non-manifold neighborhood
+
+STATE_NAMES = ("active", "habituated", "connected", "half_disk", "disk",
+               "patch", "singular")
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "w", "active", "nbr", "age", "error", "firing", "threshold",
+        "topo_state", "inconsistent_for", "n_active", "signal_count",
+        "discarded", "dropped_edges", "dropped_units", "rng",
+    ),
+    meta_fields=(),
+)
+@dataclass
+class NetworkState:
+    """The full mutable state of a growing self-organizing network."""
+
+    w: jax.Array                 # (capacity, dim) f32 reference vectors
+    active: jax.Array            # (capacity,) bool
+    nbr: jax.Array               # (capacity, max_deg) i32, NO_NBR = empty
+    age: jax.Array               # (capacity, max_deg) f32 edge ages
+    error: jax.Array             # (capacity,) f32 GNG error accumulator
+    firing: jax.Array            # (capacity,) f32 habituation counter in [h_min, 1]
+    threshold: jax.Array         # (capacity,) f32 per-unit insertion threshold
+    topo_state: jax.Array        # (capacity,) i32 SOAM state ladder
+    inconsistent_for: jax.Array  # (capacity,) i32 iterations spent non-disk
+    n_active: jax.Array          # () i32
+    signal_count: jax.Array      # () i64-ish i32 total signals consumed
+    discarded: jax.Array         # () i32 signals discarded by the winner lock
+    dropped_edges: jax.Array     # () i32 edge inserts dropped (degree overflow)
+    dropped_units: jax.Array     # () i32 unit inserts dropped (capacity full)
+    rng: jax.Array               # PRNG key threaded through updates
+
+    @property
+    def capacity(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.w.shape[1]
+
+    @property
+    def max_deg(self) -> int:
+        return self.nbr.shape[1]
+
+    def replace(self, **kw) -> "NetworkState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_state(
+    rng: jax.Array,
+    *,
+    capacity: int,
+    dim: int,
+    max_deg: int,
+    n_seed: int = 2,
+    seed_points: jax.Array | None = None,
+    init_threshold: float = 0.2,
+    init_scale: float = 0.1,
+) -> NetworkState:
+    """Fresh network with ``n_seed`` active, unconnected units."""
+    rng, sub = jax.random.split(rng)
+    if seed_points is None:
+        seed_points = init_scale * jax.random.normal(sub, (n_seed, dim))
+    seed_points = jnp.asarray(seed_points, jnp.float32)
+    n_seed = seed_points.shape[0]
+    w = jnp.zeros((capacity, dim), jnp.float32).at[:n_seed].set(seed_points)
+    return NetworkState(
+        w=w,
+        active=jnp.zeros((capacity,), bool).at[:n_seed].set(True),
+        nbr=jnp.full((capacity, max_deg), NO_NBR, jnp.int32),
+        age=jnp.zeros((capacity, max_deg), jnp.float32),
+        error=jnp.zeros((capacity,), jnp.float32),
+        firing=jnp.ones((capacity,), jnp.float32),
+        threshold=jnp.full((capacity,), init_threshold, jnp.float32),
+        topo_state=jnp.zeros((capacity,), jnp.int32),
+        inconsistent_for=jnp.zeros((capacity,), jnp.int32),
+        n_active=jnp.asarray(n_seed, jnp.int32),
+        signal_count=jnp.asarray(0, jnp.int32),
+        discarded=jnp.asarray(0, jnp.int32),
+        dropped_edges=jnp.asarray(0, jnp.int32),
+        dropped_units=jnp.asarray(0, jnp.int32),
+        rng=rng,
+    )
+
+
+@dataclass(frozen=True)
+class GSONParams:
+    """Hyper-parameters shared by GNG / GWR / SOAM update rules.
+
+    Defaults follow the published settings of the respective papers; the
+    paper under reproduction keeps one shared set across all meshes except
+    the insertion threshold.
+    """
+
+    model: str = "soam"          # "gng" | "gwr" | "soam"
+    eps_b: float = 0.05          # winner learning rate (eps_b >> eps_n)
+    eps_n: float = 0.005         # neighbor learning rate
+    age_max: float = 30.0        # edge expiry age
+    # --- GNG ---
+    gng_lambda: int = 100        # signals between insertions
+    gng_alpha: float = 0.5       # error decay on split
+    gng_beta: float = 0.0005     # global error decay
+    # --- GWR / SOAM ---
+    insertion_threshold: float = 0.2   # initial per-unit threshold
+    firing_threshold: float = 0.3      # habituated when firing < this
+    tau_b: float = 0.3           # winner habituation rate
+    tau_n: float = 0.1           # neighbor habituation rate
+    h_min: float = 0.1           # floor of the firing counter
+    # --- SOAM adaptive threshold (tracks local feature size) ---
+    thr_decay: float = 0.95      # multiplicative tightening when stuck
+    thr_recover: float = 1.01    # slow relaxation when locally disk
+    thr_min_frac: float = 0.05   # floor as a fraction of the initial threshold
+    stuck_window: int = 20       # iterations non-disk before tightening
+    # --- SOAM stabilization: stop moving topologically stable units ---
+    freeze_stable: bool = True
+    # --- multi-signal variant ---
+    max_parallel: int = 8192     # paper's cap on m
+    neighbor_collision: str = "sum"  # "sum" (deterministic) | "last" (GPU-like)

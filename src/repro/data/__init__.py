@@ -1,0 +1,2 @@
+from repro.data.tokens import TokenStream, synthetic_batch
+from repro.data.pointclouds import PointCloudStream

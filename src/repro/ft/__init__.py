@@ -1,0 +1,1 @@
+from repro.ft.elastic import ElasticRunner, FailureInjector, PodHealth

@@ -1,0 +1,3 @@
+from repro.kernels.find_winners.ops import (find_winners_op,
+                                            make_pallas_find_winners)
+from repro.kernels.find_winners.ref import find_winners_ref

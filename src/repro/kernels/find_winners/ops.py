@@ -1,0 +1,63 @@
+"""jit'd public wrapper: padding, masking, backend dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.find_winners.kernel import LARGE, find_winners_pallas_padded
+
+
+def _round_up(x: int, to: int) -> int:
+    return (x + to - 1) // to * to
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_c", "interpret"))
+def find_winners_op(signals: jax.Array, w: jax.Array, active: jax.Array,
+                    *, block_m: int = 256, block_c: int = 512,
+                    interpret: bool | None = None):
+    """Top-2 nearest active units for each signal, via the Pallas kernel.
+
+    Returns (top2_d2 (m, 2) f32, top2_ids (m, 2) i32).
+    Shapes need not be tile-aligned — padding is handled here.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, d = signals.shape
+    c = w.shape[0]
+    block_m = min(block_m, _round_up(m, 8))
+    block_c = min(block_c, _round_up(c, 128))
+    mp = _round_up(m, block_m)
+    cp = _round_up(c, block_c)
+
+    sig_p = jnp.zeros((mp, d), jnp.float32).at[:m].set(signals)
+    w_p = jnp.zeros((cp, d), jnp.float32).at[:c].set(w)
+    bias = jnp.full((1, cp), LARGE, jnp.float32).at[0, :c].set(
+        jnp.where(active, 0.0, LARGE))
+
+    out_d, out_i = find_winners_pallas_padded(
+        sig_p, w_p, bias, block_m=block_m, block_c=block_c,
+        interpret=interpret)
+    out_d, out_i = out_d[:m], out_i[:m]
+    # degenerate case (<2 active units): duplicate the winner into the
+    # second slot instead of reporting a masked/padded pseudo-unit
+    invalid2 = out_d[:, 1] >= jnp.float32(LARGE / 2)
+    out_i = out_i.at[:, 1].set(
+        jnp.where(invalid2, out_i[:, 0], out_i[:, 1]))
+    out_d = out_d.at[:, 1].set(
+        jnp.where(invalid2, out_d[:, 0], out_d[:, 1]))
+    return out_d, out_i
+
+
+def make_pallas_find_winners(block_m: int = 256, block_c: int = 512,
+                             interpret: bool | None = None):
+    """Adapter matching the engine's FindWinnersFn signature."""
+
+    def fw(signals, w, active):
+        d2, ids = find_winners_op(signals, w, active, block_m=block_m,
+                                  block_c=block_c, interpret=interpret)
+        return (ids[:, 0], ids[:, 1],
+                jnp.maximum(d2[:, 0], 0.0), jnp.maximum(d2[:, 1], 0.0))
+
+    return fw

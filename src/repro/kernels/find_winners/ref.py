@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the find_winners kernel.
+
+Deliberately computes distances the direct way (sum of squared
+differences) rather than the kernel's quadratic expansion, so the two
+implementations are numerically independent witnesses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def find_winners_ref(signals: jax.Array, w: jax.Array, active: jax.Array):
+    """Returns (top2_d2 (m, 2) f32, top2_ids (m, 2) i32). Ties -> lowest id.
+
+    Degenerate case (fewer than 2 active units): the winner occupies
+    both slots — matching the kernel, which never reports an inactive
+    unit as second-nearest."""
+    diff = signals[:, None, :] - w[None, :, :]           # (m, C, d)
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = jnp.where(active[None, :], d2, jnp.float32(1e30))
+    neg, idx = jax.lax.top_k(-d2, 2)
+    idx = idx.astype(jnp.int32)
+    second_invalid = -neg[:, 1] >= jnp.float32(1e30)
+    idx = idx.at[:, 1].set(jnp.where(second_invalid, idx[:, 0],
+                                     idx[:, 1]))
+    d2_out = jnp.stack(
+        [-neg[:, 0],
+         jnp.where(second_invalid, -neg[:, 0], -neg[:, 1])], axis=1)
+    return d2_out, idx

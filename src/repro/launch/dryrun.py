@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks at first init.
+# (No ``from __future__`` here for the same reason: nothing may run
+# before the env var is set, and __future__ must be first otherwise.)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op),
+  * the program fits (memory_analysis bytes/device vs 16 GiB HBM),
+  * and it extracts the roofline terms (cost_analysis FLOPs/bytes +
+    HLO-parsed collective bytes) consumed by EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun                       # all cells, both meshes
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --mesh single         # 16x16 only
+  python -m repro.launch.dryrun --gson                # the paper's engine
+  python -m repro.launch.dryrun --out runs/dryrun     # JSON per cell
+
+Exit code is non-zero if any attempted cell fails — failures here are
+bugs in the distribution config, per the assignment.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch import hlo_analysis as hlo
+from repro.launch import roofline as rl
+from repro.launch import steps
+from repro.launch.mesh import (HBM_PER_CHIP, make_production_mesh)
+from repro.models.common import SHAPES
+from repro.models.registry import get_bundle
+from repro.utils.trees import tree_bytes, tree_param_count
+
+SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             quiet: bool = False) -> dict:
+    cfg = get_config(arch)
+    # mirror lower_cell's serve-dtype transform so the analytic terms
+    # (param bytes, cache bytes) match what was actually lowered
+    _dep0 = steps.deploy_for(cfg.name, shape_name)
+    if _dep0.serve_bf16 and SHAPES[shape_name].kind in ("prefill",
+                                                        "decode"):
+        import jax.numpy as jnp
+        cfg = cfg.replace(param_dtype=jnp.bfloat16)
+    ok, why = steps.applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    t0 = time.time()
+    lowered = steps.lower_cell(cfg, shape_name, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = rl.memory_stats(compiled)
+    # loop-aware HLO analysis (cost_analysis counts while bodies once —
+    # see launch/hlo_analysis.py); numbers below are per-device and are
+    # scaled to module-global by x chips for the roofline table.
+    stats = hlo.analyze(compiled.as_text())
+    flops_raw, _ = rl.flops_from_cost_analysis(compiled)
+
+    chips = int(np.prod(mesh.devices.shape))
+    bundle = get_bundle(cfg)
+    pshapes = bundle.param_shapes()
+    n_params = tree_param_count(pshapes)
+    n_active = rl.active_param_count(cfg, pshapes)
+    shp = SHAPES[shape_name]
+    mf = rl.model_flops(cfg, shp, n_active)
+    dep = steps.resolve_deploy(
+        steps.deploy_for(cfg.name, shape_name), shp, mesh)
+    cache_b = 0
+    if shp.kind in ("prefill", "decode"):
+        cache_b = tree_bytes(
+            bundle.cache_shapes(shp.global_batch, shp.seq_len))
+    mem_bytes = rl.analytic_memory_bytes(
+        cfg, shp, n_params, chips, microbatches=dep.microbatches,
+        param_bytes=tree_bytes(pshapes), cache_bytes=cache_b)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bat_prod = 1
+    for a in ("pod", "data") + (("model",) if dep.tp == "none" else ()):
+        if a in sizes and (shp.global_batch * shp.seq_len) % (
+                bat_prod * sizes[a]) == 0:
+            bat_prod *= sizes[a]
+    act_shards = bat_prod * (sizes.get("model", 1)
+                             if dep.seq_shard else 1)
+    opt_b = 8 * n_params if dep.optimizer == "adamw" else n_params // 4
+    residency = rl.analytic_residency_bytes(
+        cfg, shp, n_params, chips, param_bytes=tree_bytes(pshapes),
+        opt_bytes=opt_b, cache_bytes=cache_b,
+        microbatches=dep.microbatches, act_shards=max(act_shards, 1),
+        accum_bytes_per_param=2 if dep.accum_dtype == "bf16" else 4)
+
+    cell = rl.RooflineCell(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=stats.flops * chips,
+        hlo_bytes=mem_bytes,
+        coll_bytes=stats.coll_bytes * chips,
+        coll_detail={"bytes": stats.coll_by_kind,
+                     "counts": stats.coll_counts},
+        model_flops=mf,
+        bytes_per_device=mem.get("peak_bytes", 0),
+        flops_source="hlo_loop_aware")
+    row = cell.row()
+    row.update({
+        "status": "ok",
+        "n_params": n_params, "n_params_active": n_active,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": mem,
+        "fits_hbm": mem.get("peak_bytes", 0) <= HBM_PER_CHIP,
+        "residency": residency,
+        "fits_hbm_analytic": residency["total"] <= HBM_PER_CHIP,
+        "cost_analysis_flops_bodyonce": flops_raw,
+        "hbm_traffic_hlo_estimate": stats.hbm_bytes * chips,
+        "n_while": stats.n_while, "trip_counts": stats.trip_counts,
+        "deploy": {"microbatches": dep.microbatches,
+                   "seq_shard": dep.seq_shard,
+                   "optimizer": dep.optimizer},
+    })
+    if not quiet:
+        gb = mem.get("peak_bytes", 0) / 2**30
+        print(f"    mem/dev {gb:6.2f} GiB  flops/dev {stats.flops:.3e}  "
+              f"coll/dev {stats.coll_bytes/2**20:.1f} MiB  "
+              f"bottleneck {cell.bottleneck}  "
+              f"roofline_frac {cell.roofline_frac:.3f}")
+    return row
+
+
+def run_gson(mesh, mesh_name: str) -> dict:
+    """Dry-run the paper's distributed multi-signal step (both
+    parallelization strategies) on the production mesh."""
+    from repro.configs.soam_paper import CAPACITY, DIM, MAX_DEG, config
+    from repro.core.gson.distributed import make_distributed_step
+    from repro.core.gson.state import init_state
+
+    out = {}
+    # the GSON state is small (64k-unit pool ~ a few MB) — materialize it
+    state = init_state(jax.random.key(0), capacity=CAPACITY, dim=DIM,
+                       max_deg=MAX_DEG)
+    m = config.max_parallel
+    signals = jax.ShapeDtypeStruct((m, DIM), jax.numpy.float32)
+    for strategy in ("data", "network"):
+        step = make_distributed_step(mesh, config, strategy=strategy)
+        t0 = time.time()
+        lowered = step.lower(state, signals)
+        compiled = lowered.compile()
+        mem = rl.memory_stats(compiled)
+        stats = hlo.analyze(compiled.as_text())
+        out[strategy] = {
+            "status": "ok", "mesh": mesh_name,
+            "m": m, "capacity": CAPACITY,
+            "t_total_s": round(time.time() - t0, 1),
+            "memory": mem, "hlo_flops": stats.flops,
+            "coll_bytes": stats.coll_bytes,
+            "coll_detail": stats.coll_counts,
+        }
+        print(f"  gson[{strategy:7s}] {mesh_name}: "
+              f"mem/dev {mem.get('peak_bytes', 0)/2**20:.1f} MiB  "
+              f"coll {stats.coll_bytes/2**10:.1f} KiB")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, choices=SHAPE_NAMES)
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--gson", action="store_true",
+                    help="dry-run the paper's GSON distributed step only")
+    ap.add_argument("--out", default=".runs/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+
+    if args.gson:
+        for mesh_name, mesh in meshes:
+            res = run_gson(mesh, mesh_name)
+            with open(os.path.join(
+                    args.out, f"gson_{mesh_name}.json"), "w") as f:
+                json.dump(res, f, indent=1)
+        return 0
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPE_NAMES)
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} x {mesh_name}"
+                print(f"[dryrun] {tag}", flush=True)
+                try:
+                    row = run_cell(arch, shape, mesh, mesh_name)
+                except Exception:
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape,
+                           "mesh": mesh_name, "status": "failed",
+                           "error": traceback.format_exc(limit=3)}
+                    failures += 1
+                fn = f"{arch}__{shape}__{mesh_name}.json".replace("/", "_")
+                with open(os.path.join(args.out, fn), "w") as f:
+                    json.dump(row, f, indent=1, default=str)
+                if row["status"] == "skipped":
+                    print(f"    skipped: {row['reason']}")
+    print(f"[dryrun] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

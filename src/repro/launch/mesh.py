@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Target: TPU v5e. Single pod = 256 chips as (data=16, model=16);
+multi-pod = 2 pods x 256 chips as (pod=2, data=16, model=16).
+
+A FUNCTION (not module-level constant) so importing never touches jax
+device state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (8 host devices)."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per axis direction)
+HBM_PER_CHIP = 16 * 1024**3     # 16 GiB

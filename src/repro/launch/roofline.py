@@ -1,0 +1,291 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = sum over collective ops of bytes / (chips * 50e9/link),
+               classified per op from the lowered/compiled HLO text.
+
+``cost_analysis`` supplies FLOPs/bytes; collective bytes are parsed from
+HLO because cost_analysis does not attribute them. XLA:CPU does not
+populate some fields — those fall back to analytic estimates recorded
+with source="analytic".
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# matches e.g. "bf16[16,1024,128]{2,1,0} all-gather(" including tuples
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<out>\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(?P<dt>\w+?)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, by op kind.
+
+    Bytes are per-participant (the HLO is SPMD: one program per device);
+    '-start' ops are counted, '-done' skipped to avoid double counting.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        # skip the -done halves of async pairs (shape repeats there)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if f"{m.group('op')}-done" in line:
+            continue
+        b = _shape_bytes(m.group("out"))
+        out[m.group("op")] += b
+        counts[m.group("op")] += 1
+    return {"bytes": out, "counts": counts,
+            "total": int(sum(out.values()))}
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_detail: dict = field(default_factory=dict)
+    model_flops: float = 0.0
+    bytes_per_device: float = 0.0
+    flops_source: str = "cost_analysis"
+    notes: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes is module-global (per-device traffic x chips); each
+        # chip drives its own links => divide by chips x link bandwidth
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        if self.hlo_flops <= 0:
+            return float("nan")
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def roofline_frac(self) -> float:
+        """MODEL_FLOPS-at-peak time over the dominant-term time."""
+        t_dom = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_dom <= 0:
+            return float("nan")
+        t_ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return t_ideal / t_dom
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_detail": self.coll_detail,
+            "model_flops": self.model_flops,
+            "bytes_per_device": self.bytes_per_device,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "flops_source": self.flops_source,
+            "notes": self.notes,
+        }
+
+
+def analytic_residency_bytes(cfg, shape, n_params: int, chips: int,
+                             param_bytes: int, opt_bytes: int = 0,
+                             cache_bytes: int = 0,
+                             microbatches: int = 1,
+                             act_shards: int = 1,
+                             accum_bytes_per_param: int = 4) -> dict:
+    """Per-device HBM residency budget (bytes), by component.
+
+    ``memory_analysis()`` on XLA:CPU over-reports for bf16 programs (the
+    CPU backend materializes f32 copies of bf16 operands that a TPU
+    executes natively), so the fits-HBM verdict reports BOTH numbers.
+    Components are physical allocations a TPU run must hold:
+      params+opt (sharded over all chips), grad accumulator (train),
+      remat-saved layer carries for ONE microbatch (sharded over
+      ``act_shards`` = batch shards x [tp if seq_shard]), KV/SSM cache
+      (serve), working set (~4 layer-activation buffers).
+    """
+    dt = 2 if cfg.compute_dtype == jnp.bfloat16 else 4
+    L = cfg.n_layers + getattr(cfg, "n_encoder_layers", 0)
+    D = cfg.d_model
+    out = {"params": param_bytes / chips, "opt": opt_bytes / chips,
+           "cache": cache_bytes / chips}
+    if shape.kind == "train":
+        out["grads"] = n_params * accum_bytes_per_param / chips
+        tokens_mb = shape.global_batch * shape.seq_len / max(
+            microbatches, 1)
+        out["saved_activations"] = L * tokens_mb * D * dt / act_shards
+        out["working"] = 4 * tokens_mb * D * 4 / act_shards
+    else:
+        tokens = (shape.global_batch if shape.kind == "decode"
+                  else shape.global_batch * shape.seq_len)
+        out["working"] = 6 * tokens * D * dt / max(act_shards, 1)
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def analytic_memory_bytes(cfg, shape, n_params: int, chips: int,
+                          microbatches: int = 1,
+                          param_bytes: int | None = None,
+                          cache_bytes: int | None = None) -> float:
+    """Global HBM traffic per step (bytes), from a documented inventory.
+
+    The HLO-text traffic estimate overcounts in-place ops (a
+    dynamic-update-slice 'reads' its full carry operand in the text), so
+    the memory roofline term uses this analytic model instead — every
+    line is a physical read/write a TPU must perform:
+
+    train (per microbatch, x mb):
+      weights   3 reads (fwd + remat-recompute + bwd)            3*P*dt
+      grads     1 write + 1 read (accumulate, f32)               8*P
+      remat     layer-carry save: write + read                   2*L*T*D*dt
+      work      ~6 activation rw per layer (qkv/attn/mlp io)     6*L*T*D*dt
+    plus once: optimizer read+write (f32 m,v or factored)        ~16*P|~4*P
+    prefill: weights 1 read + cache 1 write + work 4/layer
+    decode:  weights 1 read + FULL cache read + write-one-slot
+    T = tokens per microbatch (global), dt = compute dtype bytes.
+    """
+    dt = 2 if cfg.compute_dtype == jnp.bfloat16 else 4
+    pb = param_bytes if param_bytes is not None else n_params * dt
+    L = cfg.n_layers + getattr(cfg, "n_encoder_layers", 0)
+    D = cfg.d_model
+    mb = max(microbatches, 1)
+    tokens = shape.global_batch * shape.seq_len
+    t_mb = tokens / mb
+    if shape.kind == "train":
+        per_mb = 3 * pb + 8 * n_params + (2 + 6) * L * t_mb * D * dt
+        once = 16 * n_params
+        return mb * per_mb + once
+    if shape.kind == "prefill":
+        cb = cache_bytes or 0.0
+        return pb + cb + 4 * L * tokens * D * dt
+    # decode: one token; the whole cache streams through once
+    cb = cache_bytes or 0.0
+    t_dec = shape.global_batch
+    return pb + cb + 6 * L * t_dec * D * dt
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference forward),
+    D = processed tokens; MoE uses active params."""
+    if shape.kind == "train":
+        per_tok = 6.0 * n_params_active
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        per_tok = 2.0 * n_params_active
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode: one token per sequence
+        per_tok = 2.0 * n_params_active
+        tokens = shape.global_batch * 1
+    return per_tok * tokens
+
+
+def active_param_count(cfg, params_shapes) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    import jax
+    total = 0
+    for name, leaf in params_shapes.items():
+        n = int(np.prod(leaf.shape))
+        if name.startswith("layers/we_"):   # routed experts
+            e_pad = None
+            # per-expert cost: top_k / E_real of the unpadded table
+            e_dim = leaf.shape[1]
+            n = int(n / e_dim * cfg.top_k)
+        total += n
+    return total
+
+
+def flops_from_cost_analysis(compiled) -> tuple[float, str]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca and ca.get("flops", 0) > 0:
+            return float(ca["flops"]), "cost_analysis"
+    except Exception:
+        pass
+    return 0.0, "unavailable"
+
+
+def bytes_from_cost_analysis(compiled) -> float:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            return float(ca.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+    return 0.0
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(ma, "argument_size_in_bytes", 0)
+                           + getattr(ma, "temp_size_in_bytes", 0)),
+        }
+    except Exception:
+        return {}

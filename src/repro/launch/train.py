@@ -1,0 +1,103 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --smoke --steps 20 --ckpt-dir .runs/ckpt
+
+On this CPU container only --smoke (reduced config, 1 device) actually
+executes; full configs are exercised through dryrun.py. On a TPU slice
+the same entry point runs the production mesh: the mesh/rules/steps
+plumbing is identical — only device count differs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.tokens import TokenStream, synthetic_batch
+from repro.launch import steps as steps_lib
+from repro.models.common import SHAPES, SMOKE_SHAPES, rules_for_mesh
+from repro.models.registry import get_bundle, smoke_config
+from repro.training.optimizer import init_opt_state
+from repro.training.trainer import TrainConfig, init_train_state
+
+
+def make_mesh_for_env(multi_pod: bool = False):
+    n = len(jax.devices())
+    if n >= 512 and multi_pod:
+        from repro.launch.mesh import make_production_mesh
+        return make_production_mesh(multi_pod=True)
+    if n >= 256:
+        from repro.launch.mesh import make_production_mesh
+        return make_production_mesh()
+    # debug meshes for small device counts
+    shape = {1: (1, 1), 2: (2, 1), 4: (2, 2), 8: (4, 2)}.get(n, (n, 1))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:shape[0] * shape[1]]).reshape(shape),
+        ("data", "model"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    shapes = SHAPES
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        shapes = SMOKE_SHAPES
+    shape = shapes[args.shape]
+    mesh = make_mesh_for_env()
+    dep = steps_lib.resolve_deploy(
+        steps_lib.deploy_for(cfg.name, args.shape), shape, mesh)
+    rules = rules_for_mesh(mesh)
+    bundle = get_bundle(cfg)
+    step, _abstract, tcfg = steps_lib.build_train_step(
+        bundle, mesh, rules, dep)
+
+    rng = jax.random.key(args.seed)
+    params = bundle.init(rng)
+    opt_state = init_opt_state(tcfg.opt, params)
+    start = 0
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and args.resume and ckpt.latest() is not None:
+        (params, opt_state), start, _ = ckpt.restore((params, opt_state))
+        print(f"[train] resumed from step {start}")
+
+    stream = TokenStream(cfg.vocab, shape.seq_len, shape.global_batch,
+                         seed=args.seed)
+    print(f"[train] {cfg.name} shape={shape} mesh={mesh.shape} "
+          f"params={sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params)):,}")
+    t0 = time.time()
+    for i in range(start, start + args.steps):
+        batch = synthetic_batch(cfg, shape, step=i, seed=args.seed)
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if (i + 1) % args.log_every == 0:
+            loss = float(metrics["loss"])
+            print(f"  step {i+1:5d}  loss {loss:8.4f}  "
+                  f"({(time.time()-t0)/args.log_every:.2f}s/step)")
+            t0 = time.time()
+        if ckpt and (i + 1) % args.ckpt_every == 0:
+            ckpt.save_async((params, opt_state), i + 1)
+    if ckpt:
+        ckpt.wait()
+    return params, opt_state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Attention: blockwise (online-softmax) prefill/train + flash decode.
+
+Prefill/train uses a lax.scan over KV chunks with a running (max, denom,
+accumulator) carry — memory linear in sequence length, so 32k-token
+prefill fits without O(S^2) logits. This pure-jnp formulation mirrors the
+tiling of the Pallas flash_attention kernel in kernels/flash_attention
+(used on real TPUs); the jnp path is what the CPU dry-run lowers.
+
+Decode supports a sequence-sharded KV cache (SP over the 'model' axis):
+each shard computes partial (max, denom, acc) over its slice of the
+cache and merges with pmax/psum — flash-decoding. This is what makes
+decode_32k/long_500k caches fit per-device HBM when kv-head count is
+below the TP width (llama3-405b: 8 kv heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+NEG = -1e30
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        chunk: int = 512, causal: bool = True,
+                        q_offset=0) -> jax.Array:
+    """q: (B,S,H,D); k,v: (B,T,KV,D); GQA via head grouping.
+
+    Returns (B,S,H,D). ``q_offset``: global position of q[0] (for
+    prefill continuation); may be a traced scalar.
+    """
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32) * scale
+    nc = -(-t // chunk)
+    tp = nc * chunk
+    if tp != t:
+        pad = [(0, 0), (0, tp - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, kv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, kv, d), 1, 0)
+
+    pos_q = q_offset + jnp.arange(s)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        j, kj, vj = xs
+        kj = kj.astype(jnp.float32)
+        logits = jnp.einsum("bskgd,btkd->bskgt", qg, kj)    # (b,s,kv,g,ck)
+        pos_k = j * chunk + jnp.arange(chunk)
+        ok = pos_k[None, :] <= pos_q[:, None] if causal else \
+            (pos_k[None, :] < t) & jnp.ones((s, 1), bool)
+        ok = ok & (pos_k < t)[None, :]
+        logits = jnp.where(ok[None, :, None, None, :], logits, NEG)
+        mj = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m, mj)
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, kv, g), NEG, jnp.float32)
+    l0 = jnp.zeros((b, s, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, s, kv, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """Single-step decode, replicated cache. q: (B,1,H,D); k,v: (B,T,KV,D);
+    length: (B,) number of valid cache positions."""
+    b, _, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32))
+    ok = jnp.arange(t)[None, :] < length[:, None]              # (b, t)
+    logits = jnp.where(ok[:, None, None, :], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def flash_decode(mesh, q: jax.Array, k: jax.Array, v: jax.Array,
+                 length: jax.Array, seq_axis: str = "model") -> jax.Array:
+    """Decode with the KV cache sequence-sharded over ``seq_axis``.
+
+    Partial online-softmax per shard, merged with pmax/psum — collective
+    volume O(B*H*D) per step, independent of context length. The batch
+    axis stays sharded over (pod, data); only ``seq_axis`` is reduced.
+    """
+    n_shards = mesh.shape[seq_axis]
+    bat = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bat = bat if q.shape[0] % max(
+        int(np.prod([mesh.shape[a] for a in bat])), 1) == 0 else None
+
+    @partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(bat, None, None, None), P(bat, seq_axis, None, None),
+                  P(bat, seq_axis, None, None), P(bat)),
+        out_specs=P(bat, None, None, None),
+        check_vma=False,
+    )
+    def fd(qq, kk, vv, ln):
+        b, _, h, d = qq.shape
+        t_l, kv = kk.shape[1], kk.shape[2]
+        g = h // kv
+        shard = jax.lax.axis_index(seq_axis)
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+        qg = qq.reshape(b, kv, g, d).astype(jnp.float32) * scale
+        logits = jnp.einsum("bkgd,btkd->bkgt", qg, kk.astype(jnp.float32))
+        pos = shard * t_l + jnp.arange(t_l)
+        ok = pos[None, :] < ln[:, None]
+        logits = jnp.where(ok[:, None, None, :], logits, NEG)
+        m_loc = jnp.max(logits, axis=-1)                       # (b,kv,g)
+        p = jnp.exp(logits - m_loc[..., None])
+        p = jnp.where(ok[:, None, None, :], p, 0.0)
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bkgt,btkd->bkgd", p, vv.astype(jnp.float32))
+        m_g = jax.lax.pmax(m_loc, seq_axis)
+        corr = jnp.exp(m_loc - m_g)
+        l_g = jax.lax.psum(l_loc * corr, seq_axis)
+        o_g = jax.lax.psum(o_loc * corr[..., None], seq_axis)
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.reshape(b, 1, h, d).astype(qq.dtype)
+
+    return fd(q, k, v, length)

@@ -1,0 +1,311 @@
+"""Shared model machinery: configs, logical-axis sharding, primitives.
+
+Parameters are plain dict pytrees. Every module defines its parameters
+through ``ParamSet`` so that three views derive from ONE table:
+  * ``init(rng)``        — materialized arrays (smoke tests / examples)
+  * ``eval_shape`` init  — ShapeDtypeStructs (dry-run, no allocation)
+  * ``specs()``          — same-structure PartitionSpec tree (pjit)
+
+Layer-stacked leaves carry a leading "layer" axis and are scanned with
+``jax.lax.scan`` + remat, keeping HLO size independent of depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+# smoke-test variants: same code paths, toy sizes
+SMOKE_SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 64, 4, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 128, 2, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 128, 4, "decode"),
+    "long_500k": ShapeCfg("long_500k", 256, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | encdec | ssm | hybrid | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 5e5
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2): one shared attention block every k mamba layers
+    hybrid_attn_every: int = 6
+    # --- enc-dec (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_ctx: int = 1500
+    # --- vlm ---
+    n_img_tokens: int = 256
+    # --- numerics / partitioning ---
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"          # "full" | "none"
+    attn_chunk: int = 512        # blockwise attention KV chunk
+    # long-context capability marker (sub-quadratic path exists)
+    subquadratic: bool = False
+
+    @property
+    def d_inner(self) -> int:    # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def pad_to_multiple(n: int, mult: int) -> int:
+    return (n + mult - 1) // mult * mult
+
+
+# ---------------------------------------------------------------------------
+# logical-axis -> mesh-axis rules
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical param/activation axes to mesh axes (or None)."""
+    tensor_axis: str | None = "model"    # TP
+    fsdp_axis: str | None = "data"       # param FSDP
+    batch_axes: tuple = ("pod", "data")  # activation batch sharding
+    # lm_head vocab axis: kept on 'model' even when TP is off so logits
+    # stay vocab-sharded (full-vocab f32 logits per device would dwarf
+    # the activations of a small pure-DP model)
+    vocab_axis: str | None = "model"
+    mesh_axis_sizes: dict = field(default_factory=dict)
+
+    def axis_for(self, logical: str, dim_size: int):
+        """Physical mesh axis (or axis tuple) for a logical axis,
+        honoring divisibility. ``fsdp_axis`` may be a tuple
+        (("data","model") for pure-DP big models — ZeRO-3-wide)."""
+        table = {
+            "layer": None,
+            "embed": self.fsdp_axis,
+            "embed_no_fsdp": None,
+            "heads": self.tensor_axis,
+            "kv": self.tensor_axis,
+            "mlp": self.tensor_axis,
+            "vocab": self.vocab_axis,
+            # input-embedding vocab axis: REPLICATED over TP so the token
+            # gather is collective-free (the table is small; a
+            # vocab-sharded gather forces SPMD to replicate the OUTPUT —
+            # the dominant collective in the baseline roofline, see
+            # EXPERIMENTS.md §Perf iteration 1)
+            "vocab_in": None,
+            "experts": self.tensor_axis,
+            # expert matrices carry FSDP on their input dim: without it a
+            # 235B-MoE's expert slabs replicate over the data axis and
+            # blow the per-device HBM budget (§Dry-run memory table)
+            "expert_in": self.fsdp_axis,
+            "expert_out": None,
+            "ssm_heads": self.tensor_axis,
+            "ssm_state": None,
+            "conv": None,
+            "none": None,
+        }
+        ax = table[logical]
+        if ax is None:
+            return None
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= self.mesh_axis_sizes.get(a, 1)
+        if dim_size % size != 0:
+            return None  # not divisible -> replicate (recorded by caller)
+        return ax
+
+    def spec_for(self, logical_axes: tuple, shape: tuple) -> P:
+        used = set()
+        out = []
+        for name, dim in zip(logical_axes, shape):
+            ax = self.axis_for(name, dim)
+            parts = ax if isinstance(ax, tuple) else (ax,)
+            if any(p in used for p in parts if p):  # axis used once only
+                ax = None
+            elif ax is not None:
+                used.update(p for p in parts if p)
+            out.append(ax)
+        return P(*out)
+
+    def batch_spec(self, *trailing) -> P:
+        axes = tuple(a for a in self.batch_axes
+                     if a in self.mesh_axis_sizes)
+        return P(axes if axes else None, *trailing)
+
+
+def rules_for_mesh(mesh) -> ShardingRules:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardingRules(mesh_axis_sizes=sizes,
+                         vocab_axis="model" if "model" in sizes else None,
+                         batch_axes=tuple(a for a in ("pod", "data")
+                                          if a in sizes))
+
+
+# ---------------------------------------------------------------------------
+# ParamSet: one table -> init / shapes / specs
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParamDef:
+    shape: tuple
+    logical_axes: tuple
+    init: str = "normal"         # normal | zeros | ones | small
+    scale: float | None = None
+
+
+class ParamSet:
+    """Declarative parameter table for one module."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.defs: dict[str, ParamDef] = {}
+
+    def add(self, name: str, shape: tuple, logical_axes: tuple,
+            init: str = "normal", scale: float | None = None):
+        assert len(shape) == len(logical_axes), name
+        self.defs[name] = ParamDef(tuple(int(s) for s in shape),
+                                   logical_axes, init, scale)
+
+    def init(self, rng: jax.Array) -> dict:
+        cfg = self.cfg
+        out = {}
+        keys = jax.random.split(rng, max(len(self.defs), 1))
+        for k, (name, d) in zip(keys, sorted(self.defs.items())):
+            if d.init == "zeros":
+                out[name] = jnp.zeros(d.shape, cfg.param_dtype)
+            elif d.init == "ones":
+                out[name] = jnp.ones(d.shape, cfg.param_dtype)
+            else:
+                fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+                scale = d.scale if d.scale is not None else 1.0 / np.sqrt(
+                    max(fan_in, 1))
+                out[name] = (scale * jax.random.normal(
+                    k, d.shape)).astype(cfg.param_dtype)
+        return out
+
+    def specs(self, rules: ShardingRules) -> dict:
+        return {name: rules.spec_for(d.logical_axes, d.shape)
+                for name, d in sorted(self.defs.items())}
+
+
+# ---------------------------------------------------------------------------
+# numerics primitives
+# ---------------------------------------------------------------------------
+
+def cast_params(tree: dict, dtype) -> dict:
+    """Cast a (layer-stacked) param dict to the compute dtype BEFORE the
+    layer scan. The cast then happens on the FSDP-sharded storage, so
+    per-layer weight all-gathers move compute-dtype (bf16) bytes instead
+    of f32 — §Perf iteration 3 (halves FSDP gather traffic). Grads still
+    flow to the f32 master through the cast (standard mixed precision)."""
+    return {k: v.astype(dtype) for k, v in tree.items()}
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(dt) * gamma.astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * gamma.astype(dt) + beta.astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None,
+                       z_loss: float = 1e-4):
+    """Token-mean CE + z-loss; stable in f32; vocab may be model-sharded.
+
+    The gold logit is selected with an iota==label mask-and-reduce rather
+    than ``take_along_axis``: a gather along a sharded vocab axis makes
+    GSPMD replicate the logits tensor (an all-gather of B*S*V/tp floats
+    per microbatch), while the masked reduce partitions cleanly into a
+    local select + small psum. §Perf iteration 1.
+    """
+    logits = logits.astype(jnp.float32)
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + lmax[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, len(logits.shape) - 1)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    ce = lse - gold
+    zl = z_loss * jnp.square(lse)
+    tok = ce + zl
+    if mask is None:
+        return jnp.mean(tok)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,242 @@
+"""Zamba2-style hybrid: mamba2 backbone + ONE shared attention block.
+
+The shared GQA transformer block (single parameter set) is applied after
+every ``hybrid_attn_every``-th mamba layer — weight reuse across depth as
+in Zamba2 (we simplify away Zamba2's embedding-concat input to the shared
+block; recorded in DESIGN.md). The shared block's KV caches are indexed
+by invocation (n_inv = n_layers // every).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.act_sharding import constrain
+from repro.models.common import (ModelConfig, ParamSet, cast_params,
+                                 rms_norm, rope)
+from repro.models.ssm import mamba_block, mamba_decode_step, ssm_param_defs
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def hybrid_param_set(cfg: ModelConfig) -> ParamSet:
+    ps = ParamSet(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    H, KV, Dh, F = cfg.n_heads, cfg.n_kv, cfg.d_head, cfg.d_ff
+    ps.add("embed", (V, D), ("vocab_in", "embed"), scale=0.02)
+    ps.add("lm_head", (D, V), ("embed", "vocab"))
+    ps.add("final_norm", (D,), ("none",), init="ones")
+    ssm_param_defs(ps, cfg)
+    # one shared attention+MLP block
+    ps.add("shared/ln1", (D,), ("none",), init="ones")
+    ps.add("shared/ln2", (D,), ("none",), init="ones")
+    ps.add("shared/wq", (D, H * Dh), ("embed", "heads"))
+    ps.add("shared/wk", (D, KV * Dh), ("embed", "kv"))
+    ps.add("shared/wv", (D, KV * Dh), ("embed", "kv"))
+    ps.add("shared/wo", (H * Dh, D), ("heads", "embed"))
+    ps.add("shared/w_gate", (D, F), ("embed", "mlp"))
+    ps.add("shared/w_up", (D, F), ("embed", "mlp"))
+    ps.add("shared/w_down", (F, D), ("mlp", "embed"))
+    return ps
+
+
+def _shared_params(params: dict) -> dict:
+    return {k[len("shared/"):]: v for k, v in params.items()
+            if k.startswith("shared/")}
+
+
+def _layer_params(params: dict) -> dict:
+    return {k[len("layers/"):]: v for k, v in params.items()
+            if k.startswith("layers/")}
+
+
+def _shared_block(sp: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    h = constrain(rms_norm(x, sp["ln1"], cfg.norm_eps), "matmul_in")
+    q = (h @ sp["wq"].astype(x.dtype)).reshape(b, s, H, Dh)
+    k = (h @ sp["wk"].astype(x.dtype)).reshape(b, s, KV, Dh)
+    v = (h @ sp["wv"].astype(x.dtype)).reshape(b, s, KV, Dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = attn.blockwise_attention(q, k, v, chunk=cfg.attn_chunk, causal=True)
+    x = x + o.reshape(b, s, -1) @ sp["wo"].astype(x.dtype)
+    h = constrain(rms_norm(x, sp["ln2"], cfg.norm_eps), "matmul_in")
+    gate = jax.nn.silu(h @ sp["w_gate"].astype(x.dtype))
+    up = h @ sp["w_up"].astype(x.dtype)
+    return x + (gate * up) @ sp["w_down"].astype(x.dtype)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            img_embeds=None, mesh=None):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    sp = cast_params(_shared_params(params), cfg.compute_dtype)
+    lp_all = cast_params(_layer_params(params), cfg.compute_dtype)
+    every = cfg.hybrid_attn_every
+
+    def body(carry, lp):
+        x, i = carry
+        x, _ = mamba_block(lp, cfg, x)
+        x = jax.lax.cond(
+            (i + 1) % every == 0,
+            lambda xx: _shared_block(sp, cfg, xx, positions),
+            lambda xx: xx, x)
+        return (constrain(x), i + 1), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    (x, _), _ = jax.lax.scan(body_fn, (x, jnp.int32(0)), lp_all)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    L = cfg.n_layers
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    dc = cfg.ssm_conv
+    n_inv = n_shared_invocations(cfg)
+    KV, Dh = cfg.n_kv, cfg.d_head
+    return {
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "hx": jnp.zeros((L, batch, dc - 1, cfg.d_inner), dtype),
+        "hb": jnp.zeros((L, batch, dc - 1, N), dtype),
+        "hc": jnp.zeros((L, batch, dc - 1, N), dtype),
+        "k": jnp.zeros((n_inv, batch, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((n_inv, batch, max_len, KV, Dh), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int | None = None, mesh=None):
+    """Prompt pass: SSD states per mamba layer + K/V per shared-block
+    invocation. Returns (cache, last_logits)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    positions = jnp.arange(s)
+    sp = cast_params(_shared_params(params), cfg.compute_dtype)
+    every = cfg.hybrid_attn_every
+    H, KV, Dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    n_inv = n_shared_invocations(cfg)
+
+    def shared_with_cache(xx):
+        h = constrain(rms_norm(xx, sp["ln1"], cfg.norm_eps), "matmul_in")
+        q = (h @ sp["wq"].astype(xx.dtype)).reshape(b, s, H, Dh)
+        k = (h @ sp["wk"].astype(xx.dtype)).reshape(b, s, KV, Dh)
+        v = (h @ sp["wv"].astype(xx.dtype)).reshape(b, s, KV, Dh)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = attn.blockwise_attention(q, k, v, chunk=cfg.attn_chunk,
+                                     causal=True)
+        xx = xx + o.reshape(b, s, -1) @ sp["wo"].astype(xx.dtype)
+        h = constrain(rms_norm(xx, sp["ln2"], cfg.norm_eps), "matmul_in")
+        gate = jax.nn.silu(h @ sp["w_gate"].astype(xx.dtype))
+        up = h @ sp["w_up"].astype(xx.dtype)
+        xx = xx + (gate * up) @ sp["w_down"].astype(xx.dtype)
+        return xx, k, v
+
+    def body(carry, lp):
+        # K/V buffers ride in the carry so only the n_inv shared-block
+        # invocations are materialized (not one slab per mamba layer).
+        x, i, kc, vc = carry
+        x, (st, hx, hb, hc) = mamba_block(lp, cfg, x)
+        is_attn = (i + 1) % every == 0
+
+        def with_attn(args):
+            xx, kc, vc = args
+            xx, k, v = shared_with_cache(xx)
+            inv = jnp.minimum(i // every, n_inv - 1)
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype)[None], (inv, 0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype)[None], (inv, 0, 0, 0, 0))
+            return xx, kc, vc
+
+        x, kc, vc = jax.lax.cond(is_attn, with_attn, lambda a: a,
+                                 (x, kc, vc))
+        return (constrain(x), i + 1, kc, vc), (st, hx, hb, hc)
+
+    kc0 = jnp.zeros((n_inv, b, max_len, KV, Dh), cfg.compute_dtype)
+    vc0 = jnp.zeros((n_inv, b, max_len, KV, Dh), cfg.compute_dtype)
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    (x, _, kc, vc), (ssm, hx, hb, hc) = jax.lax.scan(
+        body_fn, (x, jnp.int32(0), kc0, vc0),
+        cast_params(_layer_params(params), cfg.compute_dtype))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.compute_dtype))[:, 0]
+    cache = {"ssm": ssm, "hx": hx, "hb": hb, "hc": hc, "k": kc, "v": vc,
+             "length": jnp.full((b,), s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                token: jax.Array, mesh=None):
+    x = params["embed"].astype(cfg.compute_dtype)[token]
+    b = x.shape[0]
+    length = cache["length"]
+    positions = length[:, None]
+    sp = cast_params(_shared_params(params), cfg.compute_dtype)
+    lp_all = cast_params(_layer_params(params), cfg.compute_dtype)
+    every = cfg.hybrid_attn_every
+    H, KV, Dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    use_flash = mesh is not None and "model" in getattr(
+        mesh, "axis_names", ())
+
+    def attn_step(xx, kc_all, vc_all, inv):
+        h = rms_norm(xx, sp["ln1"], cfg.norm_eps)
+        q = (h @ sp["wq"].astype(xx.dtype)).reshape(b, 1, H, Dh)
+        k = (h @ sp["wk"].astype(xx.dtype)).reshape(b, 1, KV, Dh)
+        v = (h @ sp["wv"].astype(xx.dtype)).reshape(b, 1, KV, Dh)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_slice_in_dim(kc_all, inv, 1, 0)[0]
+        vc = jax.lax.dynamic_slice_in_dim(vc_all, inv, 1, 0)[0]
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, length[0], 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, length[0], 0, 0))
+        if use_flash:
+            o = attn.flash_decode(mesh, q, kc, vc, length + 1)
+        else:
+            o = attn.decode_attention(q, kc, vc, length + 1)
+        xx = xx + o.reshape(b, 1, -1) @ sp["wo"].astype(xx.dtype)
+        h = rms_norm(xx, sp["ln2"], cfg.norm_eps)
+        gate = jax.nn.silu(h @ sp["w_gate"].astype(xx.dtype))
+        up = h @ sp["w_up"].astype(xx.dtype)
+        xx = xx + (gate * up) @ sp["w_down"].astype(xx.dtype)
+        kc_all = jax.lax.dynamic_update_slice_in_dim(
+            kc_all, kc[None], inv, 0)
+        vc_all = jax.lax.dynamic_update_slice_in_dim(
+            vc_all, vc[None], inv, 0)
+        return xx, kc_all, vc_all
+
+    def body(carry, xs):
+        x, i, kc_all, vc_all = carry
+        lp, st, hx, hb, hc = xs
+        x, (st, (hx, hb, hc)) = mamba_decode_step(lp, cfg, x, st,
+                                                  (hx, hb, hc))
+        inv = i // every
+        x, kc_all, vc_all = jax.lax.cond(
+            (i + 1) % every == 0,
+            lambda args: attn_step(*args, inv),
+            lambda args: args,
+            (x, kc_all, vc_all))
+        return (x, i + 1, kc_all, vc_all), (st, hx, hb, hc)
+
+    (x, _, k_new, v_new), (ssm, hx, hb, hc) = jax.lax.scan(
+        body, (x, jnp.int32(0), cache["k"], cache["v"]),
+        (lp_all, cache["ssm"], cache["hx"], cache["hb"], cache["hc"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.compute_dtype))[:, 0]
+    new_cache = {"ssm": ssm, "hx": hx, "hb": hb, "hc": hc,
+                 "k": k_new, "v": v_new, "length": length + 1}
+    return new_cache, logits

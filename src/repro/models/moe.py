@@ -1,0 +1,248 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP).
+
+Two execution paths sharing one parameter layout:
+
+* ``mesh=None`` (smoke tests / reference): dense dispatch — every expert
+  computed for every token, combined by the top-k gate. Exact (no
+  capacity drops); only viable for toy configs.
+
+* ``mesh`` with a 'model' axis (production): shard_map EP. Experts are
+  sharded over the model axis; tokens are additionally sequence-sharded
+  over that axis (SP) when the sequence divides it, so each token is
+  routed exactly once globally. Token->expert traffic moves through two
+  all_to_alls (dispatch + return) with fixed per-destination capacity;
+  intra-device grouping is sort-based (no (T,E,C) one-hot blowup — the
+  batched-scatter analogue of megablocks). Over-capacity assignments are
+  dropped, per standard capacity semantics.
+
+Expert count is padded to a multiple of the EP width (qwen2-moe: 60 -> 64
+with 4 never-routed null experts) — router logits of pad experts are
+masked to -inf.
+
+Shared experts (qwen2-moe) run as one fused dense MLP of width
+n_shared * d_ff_expert in the global (pjit) view alongside the routed
+path, so their sharded-F contraction is handled by GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ParamSet
+
+
+def padded_experts(cfg: ModelConfig, ep: int | None = None) -> int:
+    ep = ep or 1
+    e = cfg.n_experts
+    return (e + ep - 1) // ep * ep
+
+
+def moe_param_defs(ps: ParamSet, cfg: ModelConfig):
+    L, D = cfg.n_layers, cfg.d_model
+    F = cfg.d_ff_expert or cfg.d_ff
+    # pad experts to the worst-case EP width we deploy (16-way model axis)
+    E = padded_experts(cfg, 16)
+    ps.add("layers/router", (L, D, E), ("layer", "embed", "experts"))
+    ps.add("layers/we_gate", (L, E, D, F),
+           ("layer", "experts", "expert_in", "expert_out"))
+    ps.add("layers/we_up", (L, E, D, F),
+           ("layer", "experts", "expert_in", "expert_out"))
+    ps.add("layers/we_down", (L, E, F, D),
+           ("layer", "experts", "expert_out", "expert_in"))
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        ps.add("layers/ws_gate", (L, D, Fs), ("layer", "embed", "mlp"))
+        ps.add("layers/ws_up", (L, D, Fs), ("layer", "embed", "mlp"))
+        ps.add("layers/ws_down", (L, Fs, D), ("layer", "mlp", "embed"))
+
+
+def _router(router_w: jax.Array, cfg: ModelConfig, x2: jax.Array):
+    """x2: (T, D) -> (gates (T,k), experts (T,k) i32, stats).
+
+    ``stats`` = (assignment counts (E,), prob sums (E,), token count) —
+    kept unreduced so the EP path can psum them across shards and get
+    the exact same Switch-style load-balance aux as the dense
+    reference (aux computed from shard-local stats is a different —
+    noisier — estimator)."""
+    e_pad = router_w.shape[-1]
+    logits = (x2 @ router_w.astype(x2.dtype)).astype(jnp.float32)
+    if e_pad != cfg.n_experts:  # mask padded (null) experts
+        pad_mask = jnp.arange(e_pad) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    counts = jnp.zeros((e_pad,), jnp.float32).at[
+        experts.reshape(-1)].add(1.0)
+    stats = (counts, jnp.sum(probs, axis=0),
+             jnp.asarray(x2.shape[0], jnp.float32))
+    return gates.astype(x2.dtype), experts.astype(jnp.int32), stats
+
+
+def _aux_from_stats(cfg: ModelConfig, stats) -> jax.Array:
+    """Switch-style load balance: E * sum_e f_e * p_e."""
+    counts, prob_sum, n = stats
+    f = counts / jnp.maximum(n * cfg.top_k, 1.0)
+    p = prob_sum / jnp.maximum(n, 1.0)
+    return cfg.n_experts * jnp.sum(f * p)
+
+
+def _expert_mlp(we_gate, we_up, we_down, x):
+    """Grouped SwiGLU: x (E, Cap, D) with per-expert weights (E, D, F)."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, we_gate))
+    u = jnp.einsum("ecd,edf->ecf", x, we_up)
+    return jnp.einsum("ecf,efd->ecd", g * u, we_down)
+
+
+def _shared_mlp(lp: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ lp["ws_gate"].astype(x.dtype))
+    u = x @ lp["ws_up"].astype(x.dtype)
+    return (g * u) @ lp["ws_down"].astype(x.dtype)
+
+
+def _rank_in_group(groups: jax.Array) -> jax.Array:
+    """0-based occurrence rank of each element within its group id."""
+    order = jnp.argsort(groups, stable=True)
+    sorted_g = groups[order]
+    first = jnp.searchsorted(sorted_g, sorted_g, side="left")
+    rank_sorted = (jnp.arange(groups.shape[0]) - first).astype(jnp.int32)
+    return jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+
+# ---------------------------------------------------------------------------
+# reference (dense) path
+# ---------------------------------------------------------------------------
+
+def moe_ffn_reference(lp: dict, x: jax.Array, cfg: ModelConfig):
+    b, s, d = x.shape
+    x2 = x.reshape(-1, d)
+    gates, experts, stats = _router(lp["router"], cfg, x2)
+    aux = _aux_from_stats(cfg, stats)
+    e_pad = lp["router"].shape[-1]
+    onehot = jax.nn.one_hot(experts, e_pad, dtype=x.dtype)   # (T,k,E)
+    combine = jnp.einsum("tk,tke->te", gates, onehot)        # (T,E)
+    xe = jnp.broadcast_to(x2[None], (e_pad,) + x2.shape)     # (E,T,D)
+    ye = _expert_mlp(lp["we_gate"].astype(x.dtype),
+                     lp["we_up"].astype(x.dtype),
+                     lp["we_down"].astype(x.dtype), xe)      # (E,T,D)
+    y = jnp.einsum("te,etd->td", combine, ye)
+    if cfg.n_shared_experts:
+        y = y + _shared_mlp(lp, x2)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# EP shard_map path
+# ---------------------------------------------------------------------------
+
+def moe_ffn_ep(lp: dict, x: jax.Array, cfg: ModelConfig, mesh,
+               ep_axis: str = "model"):
+    """Expert-parallel routed experts. x: (B, S, D), batch-sharded."""
+    n_ep = mesh.shape[ep_axis]
+    e_pad = lp["router"].shape[-1]
+    e_local = e_pad // n_ep
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes, prod = [], 1
+    for a in ("pod", "data"):   # greedy divisibility vs the product
+        if a in sizes and x.shape[0] % (prod * sizes[a]) == 0:
+            batch_axes.append(a)
+            prod *= sizes[a]
+    batch_axes = tuple(batch_axes)
+    # sequence-shard tokens over the EP axis too (each token routed once
+    # globally); decode (S == 1) falls back to replicated routing where
+    # every EP rank redundantly routes its tiny token set.
+    seq_shard = x.shape[1] % n_ep == 0 and x.shape[1] >= n_ep
+    x_spec = P(batch_axes if batch_axes else None,
+               ep_axis if seq_shard else None, None)
+
+    def local_moe(router, we_gate, we_up, we_down, x_loc):
+        b_l, s_l, d = x_loc.shape
+        t_l = b_l * s_l
+        x2 = x_loc.reshape(t_l, d)
+        gates, experts, stats = _router(router, cfg, x2)
+        k = cfg.top_k
+        cap = int((t_l * k / n_ep) * cfg.capacity_factor) + 1
+
+        # ---- dispatch: per-destination-shard send buffers ----
+        flat_e = experts.reshape(-1)                      # (T*k,)
+        flat_g = gates.reshape(-1)
+        flat_t = (jnp.arange(t_l * k, dtype=jnp.int32) // k)
+        dest = flat_e // e_local
+        rank = _rank_in_group(dest)
+        fits = rank < cap
+        srow = jnp.where(fits, dest, n_ep)                # OOB -> dropped
+        slot = jnp.minimum(rank, cap - 1)
+        send_x = jnp.zeros((n_ep, cap, d), x_loc.dtype).at[
+            srow, slot].set(x2[flat_t], mode="drop")
+        send_meta = jnp.full((n_ep, cap, 2), -1, jnp.int32).at[
+            srow, slot].set(
+            jnp.stack([flat_t, flat_e % e_local], axis=1), mode="drop")
+        send_gate = jnp.zeros((n_ep, cap), jnp.float32).at[
+            srow, slot].set(flat_g.astype(jnp.float32), mode="drop")
+
+        recv_x = jax.lax.all_to_all(send_x, ep_axis, 0, 0)
+        recv_meta = jax.lax.all_to_all(send_meta, ep_axis, 0, 0)
+
+        # ---- local grouped expert compute ----
+        rx = recv_x.reshape(n_ep * cap, d)
+        re = recv_meta[..., 1].reshape(-1)                # local expert ids
+        rvalid = recv_meta[..., 0].reshape(-1) >= 0
+        cap_e = int(n_ep * cap / e_local * cfg.capacity_factor) + 1
+        eg = jnp.where(rvalid, re, e_local)
+        erank = _rank_in_group(eg)
+        efits = rvalid & (erank < cap_e)
+        erow = jnp.where(efits, eg, e_local)
+        eslot = jnp.minimum(erank, cap_e - 1)
+        buf = jnp.zeros((e_local, cap_e, d), x_loc.dtype).at[
+            erow, eslot].set(rx, mode="drop")
+        y_buf = _expert_mlp(we_gate.astype(x_loc.dtype),
+                            we_up.astype(x_loc.dtype),
+                            we_down.astype(x_loc.dtype), buf)
+        y_flat = jnp.zeros((n_ep * cap, d), x_loc.dtype).at[
+            jnp.where(efits, jnp.arange(n_ep * cap), n_ep * cap)].set(
+            y_buf[erow % e_local, eslot], mode="drop")
+        y_recv = y_flat.reshape(n_ep, cap, d)
+
+        # ---- return a2a + weighted combine at the source ----
+        y_send = jax.lax.all_to_all(y_recv, ep_axis, 0, 0)
+        tok = send_meta[..., 0].reshape(-1)
+        contrib = (send_gate.reshape(-1, 1).astype(x_loc.dtype)
+                   * y_send.reshape(-1, d))
+        y2 = jnp.zeros((t_l, d), x_loc.dtype).at[
+            jnp.where(tok >= 0, tok, t_l)].add(contrib, mode="drop")
+        # global aux: psum the raw stats over every sharded axis, THEN
+        # form the loss — exactly matches the dense reference
+        axes = tuple(batch_axes) + ((ep_axis,) if seq_shard else ())
+        if axes:
+            stats_g = jax.tree.map(
+                lambda s: jax.lax.psum(s, axes), stats)
+        else:
+            stats_g = stats
+        aux = _aux_from_stats(cfg, stats_g)
+        if not seq_shard:  # every ep rank routed identical tokens
+            aux = jax.lax.pmean(aux, ep_axis)
+        return y2.reshape(b_l, s_l, d), aux
+
+    fw = jax.shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(None, None),                 # router replicated
+                  P(ep_axis, None, None),        # experts sharded
+                  P(ep_axis, None, None),
+                  P(ep_axis, None, None),
+                  x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    y, aux = fw(lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"], x)
+    if cfg.n_shared_experts:  # global view: GSPMD shards the F contraction
+        b, s, d = x.shape
+        y = y + _shared_mlp(lp, x.reshape(-1, d)).reshape(b, s, d)
+    return y, aux
+
+
+def moe_ffn(lp: dict, x: jax.Array, cfg: ModelConfig, mesh=None):
+    if mesh is not None and "model" in getattr(mesh, "axis_names", ()):
+        return moe_ffn_ep(lp, x, cfg, mesh)
+    return moe_ffn_reference(lp, x, cfg)

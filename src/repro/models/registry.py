@@ -1,0 +1,207 @@
+"""Uniform model API consumed by the trainer, server and dry-run.
+
+``get_bundle(cfg)`` returns a ModelBundle exposing:
+  init / param_shapes / param_specs      — parameters (3 views, 1 table)
+  loss(params, batch, mesh)              — training objective
+  forward(params, batch, mesh)           — prefill-style full forward
+  init_cache / decode_step               — serving (families that decode)
+  input_specs(shape, mesh, smoke)        — ShapeDtypeStructs for lowering
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models.common import (SHAPES, SMOKE_SHAPES, ModelConfig,
+                                 ParamSet, ShapeCfg, cross_entropy_loss)
+
+
+@dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    param_set: ParamSet
+    _loss: Callable
+    _forward: Callable
+    _init_cache: Callable | None = None
+    _decode_step: Callable | None = None
+    _prefill: Callable | None = None
+
+    # ---- parameters -----------------------------------------------------
+    def init(self, rng: jax.Array) -> dict:
+        return self.param_set.init(rng)
+
+    def param_shapes(self) -> dict:
+        return jax.eval_shape(lambda: self.param_set.init(
+            jax.random.key(0)))
+
+    def param_specs(self, rules) -> dict:
+        return self.param_set.specs(rules)
+
+    # ---- compute --------------------------------------------------------
+    def loss(self, params, batch, mesh=None):
+        return self._loss(params, self.cfg, batch, mesh=mesh)
+
+    def forward(self, params, batch, mesh=None):
+        return self._forward(params, self.cfg, batch, mesh=mesh)
+
+    @property
+    def can_decode(self) -> bool:
+        return self._decode_step is not None
+
+    def init_cache(self, batch: int, max_len: int):
+        return self._init_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params, cache, token, mesh=None):
+        return self._decode_step(params, self.cfg, cache, token, mesh=mesh)
+
+    def prefill(self, params, batch, max_len=None, mesh=None):
+        """Prompt pass -> (cache, last_logits). ``batch`` as input_specs."""
+        if self.cfg.family == "encdec":
+            return self._prefill(params, self.cfg, batch["tokens"],
+                                 batch["frames"], max_len=max_len,
+                                 mesh=mesh)
+        if self.cfg.family == "vlm":
+            # image prefix + text prompt share one sequence
+            tokens = batch["tokens"]
+            return self._prefill(params, self.cfg, tokens,
+                                 max_len=max_len, mesh=mesh,
+                                 img_embeds=batch.get("img_embeds"))
+        return self._prefill(params, self.cfg, batch["tokens"],
+                             max_len=max_len, mesh=mesh)
+
+    def cache_shapes(self, batch: int, max_len: int):
+        return jax.eval_shape(
+            lambda: self._init_cache(self.cfg, batch, max_len))
+
+    # ---- lowering inputs --------------------------------------------------
+    def input_specs(self, shape: ShapeCfg) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.family == "vlm":
+                t_img = cfg.n_img_tokens
+                specs["tokens"] = jax.ShapeDtypeStruct((b, s - t_img), i32)
+                specs["labels"] = jax.ShapeDtypeStruct((b, s - t_img), i32)
+                specs["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, t_img, cfg.d_model), jnp.float32)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_ctx, cfg.d_model), jnp.float32)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.family == "vlm":
+                t_img = cfg.n_img_tokens
+                specs["tokens"] = jax.ShapeDtypeStruct((b, s - t_img), i32)
+                specs["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, t_img, cfg.d_model), jnp.float32)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_ctx, cfg.d_model), jnp.float32)
+            return specs
+        # decode: one new token against a seq_len cache
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+                "cache": self.cache_shapes(b, s)}
+
+
+# ---------------------------------------------------------------------------
+# family wiring
+# ---------------------------------------------------------------------------
+
+def _dense_loss(params, cfg, batch, mesh=None):
+    return transformer.loss_fn(params, cfg, batch, mesh=mesh)
+
+
+def _dense_forward(params, cfg, batch, mesh=None):
+    return transformer.forward(params, cfg, batch["tokens"],
+                               batch.get("img_embeds"), mesh=mesh)
+
+
+def _encdec_loss(params, cfg, batch, mesh=None):
+    logits, aux = encdec.forward(params, cfg, batch["tokens"],
+                                 batch["frames"], mesh=mesh)
+    labels = batch["labels"]
+    ce = cross_entropy_loss(logits, jnp.maximum(labels, 0), labels >= 0)
+    return ce, {"ce": ce, "aux": aux}
+
+
+def _encdec_forward(params, cfg, batch, mesh=None):
+    return encdec.forward(params, cfg, batch["tokens"], batch["frames"],
+                          mesh=mesh)
+
+
+def _simple_loss(fwd):
+    def loss(params, cfg, batch, mesh=None):
+        logits, aux = fwd(params, cfg, batch["tokens"], mesh=mesh)
+        labels = batch["labels"]
+        ce = cross_entropy_loss(logits, jnp.maximum(labels, 0), labels >= 0)
+        return ce, {"ce": ce, "aux": aux}
+    return loss
+
+
+def get_bundle(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg, transformer.dense_param_set(cfg),
+            _dense_loss, _dense_forward,
+            transformer.init_cache, transformer.decode_step,
+            transformer.prefill)
+    if fam == "encdec":
+        # decode shapes: decoder self-attn cache; cross K/V cached at
+        # encoder_ctx. ``input_specs`` uses cache_shapes below.
+        return ModelBundle(
+            cfg, encdec.encdec_param_set(cfg),
+            _encdec_loss, _encdec_forward,
+            encdec.init_cache, encdec.decode_step,
+            encdec.prefill)
+    if fam == "ssm":
+        return ModelBundle(
+            cfg, ssm_lm.ssm_param_set(cfg),
+            _simple_loss(ssm_lm.forward),
+            lambda p, c, b, mesh=None: ssm_lm.forward(
+                p, c, b["tokens"], mesh=mesh),
+            ssm_lm.init_cache, ssm_lm.decode_step,
+            ssm_lm.prefill)
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg, hybrid.hybrid_param_set(cfg),
+            _simple_loss(hybrid.forward),
+            lambda p, c, b, mesh=None: hybrid.forward(
+                p, c, b["tokens"], mesh=mesh),
+            hybrid.init_cache, hybrid.decode_step,
+            hybrid.prefill)
+    raise ValueError(fam)
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=2, d_model=64, d_head=16, vocab=256,
+        remat="none", attn_chunk=32, compute_dtype=jnp.float32,
+        param_dtype=jnp.float32, rope_theta=1e4,
+    )
+    kw["n_heads"] = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    kw["n_kv"] = min(cfg.n_kv, kw["n_heads"]) if cfg.n_kv else 0
+    kw["d_ff"] = 128 if cfg.d_ff else 0
+    if cfg.family == "moe":
+        kw.update(n_experts=8, top_k=min(cfg.top_k, 2),
+                  d_ff_expert=32,
+                  n_shared_experts=min(cfg.n_shared_experts, 2))
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=8, ssm_headdim=8, ssm_chunk=16)
+    if cfg.family == "hybrid":
+        kw.update(hybrid_attn_every=2, n_heads=4, n_kv=4, d_ff=128)
+    if cfg.family == "encdec":
+        kw.update(n_encoder_layers=2, encoder_ctx=24)
+    if cfg.family == "vlm":
+        kw.update(n_img_tokens=8)
+    return cfg.replace(**kw)

@@ -1,0 +1,178 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked scan + O(1) decode.
+
+The SSD form splits the sequence into chunks: within-chunk interactions
+are a masked (decay-weighted) quadratic form computed on the MXU;
+cross-chunk information flows through a small carried state
+(B, H, P, N) via lax.scan — sub-quadratic in sequence length, which is
+what qualifies mamba2/zamba2 for the long_500k cell.
+
+Projections are kept per-component (z, x, B, C, dt) rather than one fused
+matmul so each output dim gets a clean TP sharding without GSPMD slicing
+through a concatenated axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.act_sharding import constrain
+from repro.models.common import ModelConfig, ParamSet, rms_norm
+
+
+def ssm_param_defs(ps: ParamSet, cfg: ModelConfig, prefix: str = "layers"):
+    L, D = cfg.n_layers, cfg.d_model
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dc = cfg.ssm_conv
+    ps.add(f"{prefix}/ln", (L, D), ("layer", "none"), init="ones")
+    ps.add(f"{prefix}/wz", (L, D, di), ("layer", "embed", "ssm_heads"))
+    ps.add(f"{prefix}/wx", (L, D, di), ("layer", "embed", "ssm_heads"))
+    ps.add(f"{prefix}/wB", (L, D, N), ("layer", "embed", "ssm_state"))
+    ps.add(f"{prefix}/wC", (L, D, N), ("layer", "embed", "ssm_state"))
+    ps.add(f"{prefix}/wdt", (L, D, H), ("layer", "embed", "ssm_heads"))
+    ps.add(f"{prefix}/conv_x", (L, dc, di), ("layer", "conv", "ssm_heads"),
+           scale=0.5)
+    ps.add(f"{prefix}/conv_B", (L, dc, N), ("layer", "conv", "ssm_state"),
+           scale=0.5)
+    ps.add(f"{prefix}/conv_C", (L, dc, N), ("layer", "conv", "ssm_state"),
+           scale=0.5)
+    ps.add(f"{prefix}/A_log", (L, H), ("layer", "ssm_heads"), init="zeros")
+    ps.add(f"{prefix}/Dskip", (L, H), ("layer", "ssm_heads"), init="ones")
+    ps.add(f"{prefix}/dt_bias", (L, H), ("layer", "ssm_heads"),
+           init="zeros")
+    ps.add(f"{prefix}/gnorm", (L, di), ("layer", "ssm_heads"), init="ones")
+    ps.add(f"{prefix}/wo", (L, di, D), ("layer", "ssm_heads", "embed"))
+
+
+def causal_conv(x: jax.Array, w: jax.Array, hist: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (dc,C). hist: (B,dc-1,C)."""
+    dc = w.shape[0]
+    if hist is None:
+        hist = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+            for i in range(dc))
+    new_hist = xp[:, -(dc - 1):] if dc > 1 else hist
+    return y, new_hist
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                state0: jax.Array | None = None):
+    """SSD scan. x: (B,S,H,P); dt: (B,S,H); A: (H,) (<0 decay rates);
+    Bm, Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Recurrence: S_j = exp(dt_j A) S_{j-1} + dt_j B_j x_j^T; y_j = C_j S_j.
+    Chunks are processed inside ONE lax.scan so the (B,H,Q,Q) quadratic
+    intra-chunk tensor exists for a single chunk at a time — the live
+    footprint is O(B*H*Q^2), not O(B*H*S*Q).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    q = chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, q, h, p), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, h), 1, 0).astype(jnp.float32)
+    bc = jnp.moveaxis(Bm.reshape(b, nc, q, n), 1, 0).astype(jnp.float32)
+    cc = jnp.moveaxis(Cm.reshape(b, nc, q, n), 1, 0).astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def scan_body(s_carry, xs_c):
+        x_c, dt_c, b_c, c_c = xs_c                   # (b,q,h,*) one chunk
+        loga = dt_c * A[None, None, :]               # (b,q,h)
+        cum = jnp.cumsum(loga, axis=1)               # inclusive
+        # intra-chunk: (C_i . B_j) exp(cum_i - cum_j) dt_j  for i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # (b,i,j,h)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        L = L * dt_c[:, None, :, :]
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)
+        m = cb[:, :, :, None] * L                    # (b,i,j,h)
+        y = jnp.einsum("bijh,bjhp->bihp", m, x_c)
+        # inter-chunk: y_i += (C_i . S0) exp(cum_i)
+        y_int = jnp.einsum("bqn,bhpn->bqhp", c_c, s_carry)
+        y = y + y_int * jnp.exp(cum)[..., :, :, None]
+        # state to the next chunk
+        w_end = jnp.exp(cum[:, -1:, :] - cum) * dt_c        # (b,q,h)
+        s_p = jnp.einsum("bjh,bjn,bjhp->bhpn", w_end, b_c, x_c)
+        s_next = jnp.exp(cum[:, -1, :])[:, :, None, None] * s_carry + s_p
+        return s_next, y
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    state, yc = jax.lax.scan(scan_body, state0.astype(jnp.float32),
+                             (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, s, h, p)
+    return y.astype(x.dtype), state
+
+
+def mamba_block(lp: dict, cfg: ModelConfig, x: jax.Array,
+                prefix_state: tuple | None = None):
+    """One mamba2 block (full sequence). Returns (out, (ssm_state, convs))."""
+    b, s, d = x.shape
+    h_, p_, n_ = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    dt_ = x.dtype
+    res = x
+    xh = constrain(rms_norm(x, lp["ln"], cfg.norm_eps), "matmul_in")
+    z = xh @ lp["wz"].astype(dt_)
+    xs = xh @ lp["wx"].astype(dt_)
+    bm = xh @ lp["wB"].astype(dt_)
+    cm = xh @ lp["wC"].astype(dt_)
+    dt_raw = xh @ lp["wdt"].astype(dt_)
+
+    if prefix_state is None:
+        hx = hb = hc = None
+        state0 = None
+    else:
+        state0, hx, hb, hc = prefix_state
+    xs, hx = causal_conv(xs, lp["conv_x"].astype(dt_), hx)
+    bm, hb = causal_conv(bm, lp["conv_B"].astype(dt_), hb)
+    cm, hc = causal_conv(cm, lp["conv_C"].astype(dt_), hc)
+    xs, bm, cm = jax.nn.silu(xs), jax.nn.silu(bm), jax.nn.silu(cm)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xsh = xs.reshape(b, s, h_, p_)
+    # dt_j is absorbed inside ssd_chunked's decay kernel — no pre-scaling
+    y, state = ssd_chunked(xsh, dt, A, bm, cm,
+                           min(cfg.ssm_chunk, s), state0)
+    y = y + lp["Dskip"].astype(dt_)[None, None, :, None] * xsh
+    y = y.reshape(b, s, -1)
+    y = rms_norm(y * jax.nn.silu(z), lp["gnorm"], cfg.norm_eps)
+    out = res + y @ lp["wo"].astype(dt_)
+    return out, (state, hx, hb, hc)
+
+
+def mamba_decode_step(lp: dict, cfg: ModelConfig, x: jax.Array,
+                      state: jax.Array, conv_hist: tuple):
+    """O(1) single-token step. x: (B,1,D); state: (B,H,P,N);
+    conv_hist: (hx, hb, hc) each (B, dc-1, C)."""
+    b = x.shape[0]
+    h_, p_ = cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = x.dtype
+    res = x
+    xh = constrain(rms_norm(x, lp["ln"], cfg.norm_eps), "matmul_in")
+    z = xh @ lp["wz"].astype(dt_)
+    xs = xh @ lp["wx"].astype(dt_)
+    bm = xh @ lp["wB"].astype(dt_)
+    cm = xh @ lp["wC"].astype(dt_)
+    dt_raw = xh @ lp["wdt"].astype(dt_)
+    hx, hb, hc = conv_hist
+    xs, hx = causal_conv(xs, lp["conv_x"].astype(dt_), hx)
+    bm, hb = causal_conv(bm, lp["conv_B"].astype(dt_), hb)
+    cm, hc = causal_conv(cm, lp["conv_C"].astype(dt_), hc)
+    xs, bm, cm = jax.nn.silu(xs), jax.nn.silu(bm), jax.nn.silu(cm)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                               # (B,H)
+    xv = (xs[:, 0].reshape(b, h_, p_).astype(jnp.float32)
+          * dt[..., None])
+    outer = jnp.einsum("bhp,bn->bhpn", xv, bm[:, 0].astype(jnp.float32))
+    state = a[:, :, None, None] * state + outer
+    y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), state)
+    y = y.astype(dt_) + lp["Dskip"].astype(dt_)[None, :, None] \
+        * xs[:, 0].reshape(b, h_, p_)
+    y = y.reshape(b, 1, -1)
+    y = rms_norm(y * jax.nn.silu(z), lp["gnorm"], cfg.norm_eps)
+    out = res + y @ lp["wo"].astype(dt_)
+    return out, (state, (hx, hb, hc))

@@ -1,0 +1,101 @@
+"""Pure Mamba2 language model (attention-free; mamba2-2.7b)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.act_sharding import constrain
+from repro.models.common import (ModelConfig, ParamSet, cast_params,
+                                 rms_norm)
+from repro.models.ssm import (mamba_block, mamba_decode_step,
+                              ssm_param_defs)
+
+
+def ssm_param_set(cfg: ModelConfig) -> ParamSet:
+    ps = ParamSet(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    ps.add("embed", (V, D), ("vocab_in", "embed"), scale=0.02)
+    ps.add("lm_head", (D, V), ("embed", "vocab"))
+    ps.add("final_norm", (D,), ("none",), init="ones")
+    ssm_param_defs(ps, cfg)
+    return ps
+
+
+def _layer_params(params: dict) -> dict:
+    return {k[len("layers/"):]: v for k, v in params.items()
+            if k.startswith("layers/")}
+
+
+def _cast_layers(params: dict, cfg) -> dict:
+    return cast_params(_layer_params(params), cfg.compute_dtype)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            img_embeds=None, mesh=None):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+
+    def body(x, lp):
+        x, _ = mamba_block(lp, cfg, x)
+        return constrain(x), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, _cast_layers(params, cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    L = cfg.n_layers
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    dc = cfg.ssm_conv
+    return {
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "hx": jnp.zeros((L, batch, dc - 1, cfg.d_inner), dtype),
+        "hb": jnp.zeros((L, batch, dc - 1, N), dtype),
+        "hc": jnp.zeros((L, batch, dc - 1, N), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int | None = None, mesh=None):
+    """Run the prompt, return (cache, last_logits). The 'cache' of an SSM
+    is O(1) in sequence length: final SSD state + conv tails per layer."""
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    b, s = tokens.shape
+
+    def body(x, lp):
+        x, (st, hx, hb, hc) = mamba_block(lp, cfg, x)
+        return constrain(x), (st, hx, hb, hc)
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, (ssm, hx, hb, hc) = jax.lax.scan(body_fn, x,
+                                        _cast_layers(params, cfg))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.compute_dtype))[:, 0]
+    cache = {"ssm": ssm, "hx": hx, "hb": hb, "hc": hc,
+             "length": jnp.full((b,), s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                token: jax.Array, mesh=None):
+    x = params["embed"].astype(cfg.compute_dtype)[token]
+
+    def body(x, xs):
+        lp, st, hx, hb, hc = xs
+        x, (st, (hx, hb, hc)) = mamba_decode_step(lp, cfg, x, st,
+                                                  (hx, hb, hc))
+        return x, (st, hx, hb, hc)
+
+    x, (ssm, hx, hb, hc) = jax.lax.scan(
+        body, x, (_cast_layers(params, cfg), cache["ssm"], cache["hx"],
+                  cache["hb"], cache["hc"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.compute_dtype))[:, 0]
+    cache = {"ssm": ssm, "hx": hx, "hb": hb, "hc": hc,
+             "length": cache["length"] + 1}
+    return cache, logits

@@ -1,0 +1,267 @@
+"""Decoder-only transformer LM (dense GQA family + MoE + VLM prefix).
+
+Parameters are layer-stacked (leading L axis) and the layer body is
+lax.scan'ed with optional remat — HLO size is depth-independent, which
+keeps 126-layer dry-run compiles tractable. The FFN is pluggable so the
+MoE family reuses this module wholesale.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.act_sharding import constrain
+from repro.models.common import (ModelConfig, ParamSet, cast_params,
+                                 cross_entropy_loss, rms_norm, rope)
+
+
+# ---------------------------------------------------------------------------
+# parameter tables
+# ---------------------------------------------------------------------------
+
+def dense_param_set(cfg: ModelConfig) -> ParamSet:
+    ps = ParamSet(cfg)
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    H, KV, Dh, F = cfg.n_heads, cfg.n_kv, cfg.d_head, cfg.d_ff
+    ps.add("embed", (V, D), ("vocab_in", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        ps.add("lm_head", (D, V), ("embed", "vocab"))
+    ps.add("final_norm", (D,), ("none",), init="ones")
+    ps.add("layers/ln1", (L, D), ("layer", "none"), init="ones")
+    ps.add("layers/ln2", (L, D), ("layer", "none"), init="ones")
+    ps.add("layers/wq", (L, D, H * Dh), ("layer", "embed", "heads"))
+    ps.add("layers/wk", (L, D, KV * Dh), ("layer", "embed", "kv"))
+    ps.add("layers/wv", (L, D, KV * Dh), ("layer", "embed", "kv"))
+    ps.add("layers/wo", (L, H * Dh, D), ("layer", "heads", "embed"))
+    if cfg.qkv_bias:
+        ps.add("layers/bq", (L, H * Dh), ("layer", "heads"), init="zeros")
+        ps.add("layers/bk", (L, KV * Dh), ("layer", "kv"), init="zeros")
+        ps.add("layers/bv", (L, KV * Dh), ("layer", "kv"), init="zeros")
+    _ffn_params(ps, cfg)
+    return ps
+
+
+def _ffn_params(ps: ParamSet, cfg: ModelConfig):
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    if cfg.family in ("dense", "vlm", "encdec"):
+        ps.add("layers/w_gate", (L, D, F), ("layer", "embed", "mlp"))
+        ps.add("layers/w_up", (L, D, F), ("layer", "embed", "mlp"))
+        ps.add("layers/w_down", (L, F, D), ("layer", "mlp", "embed"))
+    elif cfg.family == "moe":
+        from repro.models.moe import moe_param_defs
+        moe_param_defs(ps, cfg)
+    else:
+        raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _unstack_layers(params: dict) -> dict:
+    return {k[len("layers/"):]: v for k, v in params.items()
+            if k.startswith("layers/")}
+
+
+def qkv(lp: dict, cfg: ModelConfig, x: jax.Array):
+    b, s, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q = x @ lp["wq"].astype(x.dtype)
+    k = x @ lp["wk"].astype(x.dtype)
+    v = x @ lp["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(x.dtype)
+        k = k + lp["bk"].astype(x.dtype)
+        v = v + lp["bv"].astype(x.dtype)
+    return (q.reshape(b, s, H, Dh), k.reshape(b, s, KV, Dh),
+            v.reshape(b, s, KV, Dh))
+
+
+def mlp(lp: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ lp["w_gate"].astype(x.dtype))
+    up = x @ lp["w_up"].astype(x.dtype)
+    return (gate * up) @ lp["w_down"].astype(x.dtype)
+
+
+def make_ffn(cfg: ModelConfig, mesh=None):
+    if cfg.family == "moe":
+        from repro.models.moe import moe_ffn
+        return partial(moe_ffn, cfg=cfg, mesh=mesh)
+
+    def ffn(lp, x):
+        return mlp(lp, x), jnp.zeros((), jnp.float32)
+
+    return ffn
+
+
+def decoder_layer(lp: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, ffn) -> tuple[jax.Array, jax.Array]:
+    """Pre-norm GQA block. Returns (x, aux_loss)."""
+    h = constrain(rms_norm(x, lp["ln1"], cfg.norm_eps), "matmul_in")
+    q, k, v = qkv(lp, cfg, h)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = attn.blockwise_attention(q, k, v, chunk=cfg.attn_chunk, causal=True)
+    b, s = x.shape[:2]
+    x = x + o.reshape(b, s, -1) @ lp["wo"].astype(x.dtype)
+    h = constrain(rms_norm(x, lp["ln2"], cfg.norm_eps), "matmul_in")
+    y, aux = ffn(lp, h)
+    return constrain(x + y), aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            img_embeds: jax.Array | None = None, mesh=None) -> tuple:
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss)."""
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if img_embeds is not None:  # VLM: precomputed patch embeddings prefix
+        x = jnp.concatenate(
+            [img_embeds.astype(cfg.compute_dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    ffn = make_ffn(cfg, mesh)
+    layer_params = cast_params(_unstack_layers(params),
+                               cfg.compute_dtype)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = decoder_layer(lp, cfg, x, positions, ffn)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               layer_params)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.compute_dtype)
+    return x @ head, aux
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict, mesh=None):
+    """batch: tokens (B,S) i32, labels (B,S) i32 (-1 = masked),
+    optional img_embeds (B,Timg,D)."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("img_embeds"), mesh=mesh)
+    labels = batch["labels"]
+    if batch.get("img_embeds") is not None:
+        t_img = batch["img_embeds"].shape[1]
+        logits = logits[:, t_img:]
+    ce = cross_entropy_loss(logits, jnp.maximum(labels, 0), labels >= 0)
+    return ce + cfg.router_aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    L, KV, Dh = cfg.n_layers, cfg.n_kv, cfg.d_head
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, KV, Dh), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                token: jax.Array, mesh=None) -> tuple[dict, jax.Array]:
+    """One decode step. token: (B, 1) i32. Returns (cache, logits (B,V)).
+
+    KV cache is sequence-sharded when a mesh with a 'model' axis is given
+    (flash-decoding); otherwise replicated decode attention.
+    """
+    x = params["embed"].astype(cfg.compute_dtype)[token]      # (B,1,D)
+    b = x.shape[0]
+    length = cache["length"]                                   # (B,)
+    positions = length[:, None]                                # (B,1)
+    ffn = make_ffn(cfg, mesh)
+    layer_params = cast_params(_unstack_layers(params),
+                               cfg.compute_dtype)
+
+    use_flash = mesh is not None and "model" in getattr(
+        mesh, "axis_names", ())
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, kc, vc = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = qkv(lp, cfg, h)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(  # same position for all rows is
+            kc, k.astype(kc.dtype),          # the serving-engine invariant
+            (0, length[0], 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.astype(vc.dtype), (0, length[0], 0, 0))
+        if use_flash:
+            o = attn.flash_decode(mesh, q, kc, vc, length + 1)
+        else:
+            o = attn.decode_attention(q, kc, vc, length + 1)
+        x = x + o.reshape(b, 1, -1) @ lp["wo"].astype(x.dtype)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, a = ffn(lp, h)
+        return (x + y, aux + a), (kc, vc)
+
+    (x, _), (k_new, v_new) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (layer_params, cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.compute_dtype)
+    logits = (x @ head)[:, 0]
+    cache = {"k": k_new, "v": v_new, "length": length + 1}
+    return cache, logits
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int | None = None, mesh=None,
+            img_embeds: jax.Array | None = None) -> tuple[dict, jax.Array]:
+    """Run the full prompt, build the cache. Returns (cache, last_logits)."""
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if img_embeds is not None:  # VLM: image patch prefix
+        x = jnp.concatenate(
+            [img_embeds.astype(cfg.compute_dtype), x], axis=1)
+    b, s = x.shape[:2]
+    max_len = max_len or s
+    positions = jnp.arange(s)
+    ffn = make_ffn(cfg, mesh)
+    layer_params = cast_params(_unstack_layers(params),
+                               cfg.compute_dtype)
+
+    def body(carry, lp):
+        x, aux = carry
+        h = constrain(rms_norm(x, lp["ln1"], cfg.norm_eps), "matmul_in")
+        q, k, v = qkv(lp, cfg, h)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = attn.blockwise_attention(q, k, v, chunk=cfg.attn_chunk,
+                                     causal=True)
+        x2 = x + o.reshape(b, s, -1) @ lp["wo"].astype(x.dtype)
+        h2 = constrain(rms_norm(x2, lp["ln2"], cfg.norm_eps), "matmul_in")
+        y, a = ffn(lp, h2)
+        kc = jnp.zeros((b, max_len) + k.shape[2:], cfg.compute_dtype)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, 0, 0, 0))
+        vc = jnp.zeros((b, max_len) + v.shape[2:], cfg.compute_dtype)
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, 0, 0, 0))
+        return (constrain(x2 + y), aux + a), (kc, vc)
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    (x, _), (k_all, v_all) = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), layer_params)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.compute_dtype)
+    logits = (x @ head)[:, 0]
+    cache = {"k": k_all, "v": v_all,
+             "length": jnp.full((b,), s, jnp.int32)}
+    return cache, logits

@@ -1,0 +1,158 @@
+"""Batched serving engine: wave-based continuous batching.
+
+A fixed pool of ``batch`` sequence slots shares one KV/SSM cache (the
+production layout from launch/steps.cache_specs). Requests queue up and
+are admitted in *waves*: all queued requests (up to the slot count) are
+prefILLED together as one batched prompt pass, then one fused decode
+step advances every live slot per tick. Early-finished slots idle until
+the wave drains (their logits are computed and discarded — the batch
+shape stays static, which is what keeps the decode step a single
+compiled program).
+
+This is a deliberate simplification of per-slot paged admission: the
+cache writes one position per step (`length[0]`), so all slots advance
+in lockstep. Recorded in DESIGN.md §risks. Batched decode itself is
+exactly the paper's multi-signal pattern applied to serving: the
+parallel axis is the number of in-flight requests (data), not the model
+— and like the paper's m-schedule, throughput scales with the wave
+size, not the network size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelBundle
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_tokens: int = 32
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    batch: int = 8                # slot count
+    max_len: int = 512
+    eos_id: int = 1
+    temperature: float = 0.0      # 0 = greedy
+
+
+class ServeEngine:
+    def __init__(self, bundle: ModelBundle, params, cfg: ServeConfig,
+                 mesh=None, rng=None):
+        self.bundle = bundle
+        self.params = params
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rng = rng if rng is not None else jax.random.key(0)
+        self.queue: list[Request] = []
+        self.slots: list[Request | None] = [None] * cfg.batch
+        self.finished: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t: bundle.decode_step(p, c, t, mesh=mesh))
+        self._prefill = jax.jit(
+            lambda p, b: bundle.prefill(p, b, max_len=cfg.max_len,
+                                        mesh=mesh))
+        self.cache = None
+        self.tokens = jnp.zeros((cfg.batch, 1), jnp.int32)
+        self.decode_steps = 0
+        self.prefills = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, rid: int | None = None,
+               max_tokens: int = 32) -> Request:
+        rid = rid if rid is not None else (
+            len(self.queue) + len(self.finished)
+            + sum(r is not None for r in self.slots))
+        req = Request(rid, np.asarray(prompt, np.int32), max_tokens)
+        self.queue.append(req)
+        return req
+
+    def _admit_wave(self):
+        """Fill free slots from the queue, one batched prefill.
+
+        Prompts are right-aligned to the wave's longest prompt by
+        left-padding with token 0, so the shared cache position is the
+        same for every slot (the lockstep invariant).
+        """
+        wave = []
+        for i in range(self.cfg.batch):
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self.slots[i] = req
+            wave.append((i, req))
+        plen = max(len(r.prompt) for _, r in wave)
+        b = self.cfg.batch
+        toks = np.zeros((b, plen), np.int32)
+        for slot, req in wave:
+            toks[slot, plen - len(req.prompt):] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        batch.update(self._modality_stub(b))
+        self.cache, logits = self._prefill(self.params, batch)
+        self.prefills += 1
+        nxt = self._sample(logits)
+        self.tokens = nxt[:, None]
+        for slot, req in wave:
+            req.out.append(int(nxt[slot]))
+
+    def _modality_stub(self, b: int) -> dict:
+        cfg = self.bundle.cfg
+        if cfg.family == "encdec":
+            return {"frames": jnp.zeros(
+                (b, cfg.encoder_ctx, cfg.d_model), jnp.float32)}
+        if cfg.family == "vlm":
+            return {"img_embeds": jnp.zeros(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.float32)}
+        return {}
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(
+            k, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit a wave when idle, else decode."""
+        live = [r for r in self.slots if r is not None and not r.done]
+        if not live:
+            self._drain()
+            if self.queue:
+                self._admit_wave()
+            return
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          self.tokens)
+        nxt = self._sample(logits)
+        self.tokens = nxt[:, None]
+        self.decode_steps += 1
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            tok = int(nxt[i])
+            req.out.append(tok)
+            if tok == self.cfg.eos_id or len(req.out) >= req.max_tokens:
+                req.done = True
+
+    def _drain(self):
+        for i, req in enumerate(self.slots):
+            if req is not None and req.done:
+                self.finished.append(req)
+                self.slots[i] = None
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        while (self.queue or any(
+                r is not None for r in self.slots)) and max_ticks > 0:
+            self.step()
+            max_ticks -= 1
+        self._drain()
+        return self.finished

@@ -1,0 +1,157 @@
+"""Sharded optimizers: AdamW and Adafactor (factored second moment).
+
+Optimizer state mirrors parameter sharding (each moment leaf inherits the
+param's PartitionSpec), so optimizer memory scales down with FSDP x TP.
+Adafactor is the default for llama3-405b-class models: full AdamW moments
+(8 bytes/param f32) would not fit the 256-chip pod budget — see DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95             # adafactor: decay exponent toward 1
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    min_dim_factored: int = 128  # factor leaves with both dims >= this
+
+
+def _factored(cfg: OptConfig, shape: tuple) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.min_dim_factored
+            and shape[-2] >= cfg.min_dim_factored)
+
+
+def init_opt_state(cfg: OptConfig, params) -> dict:
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name == "adafactor":
+        def vrow(p):
+            if _factored(cfg, p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vcol(p):
+            if _factored(cfg, p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)  # unused placeholder
+
+        return {
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.name)
+
+
+def match_opt_specs(cfg: OptConfig, params_shapes, param_specs) -> dict:
+    """Specs for opt state, shape-aware (handles factored leaves)."""
+    if cfg.name == "adamw":
+        return {"m": param_specs, "v": param_specs, "step": P()}
+
+    def vr(p, s):
+        s = tuple(s) + (None,) * (len(p.shape) - len(tuple(s)))
+        if _factored(cfg, p.shape):
+            return P(*s[:-1])
+        return P(*s)
+
+    def vc(p, s):
+        s = tuple(s) + (None,) * (len(p.shape) - len(tuple(s)))
+        if _factored(cfg, p.shape):
+            return P(*(s[:-2] + s[-1:]))
+        return P()
+
+    return {
+        "vr": jax.tree.map(vr, params_shapes, param_specs),
+        "vc": jax.tree.map(vc, params_shapes, param_specs),
+        "step": P(),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def apply_update(cfg: OptConfig, params, grads, state):
+    """Returns (new_params, new_state). Grads may be bf16; math in f32."""
+    step = state["step"] + 1
+    if cfg.name == "adamw":
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+                * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    # ---- adafactor ----
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-0.8)            # schedule per Shazeer & Stern
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(cfg, p.shape):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            pre = r[..., None] * vc[..., None, :]
+            update = g / jnp.sqrt(pre + cfg.eps)
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            update = g / jnp.sqrt(vr + cfg.eps)
+        # relative step clipping (RMS-1) as in the paper
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32)
+                 - cfg.lr * update
+                 - cfg.lr * cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), vr, vc
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_vr = tdef.flatten_up_to(state["vr"])
+    flat_vc = tdef.flatten_up_to(state["vc"])
+    out = [upd(p, g, vr, vc) for p, g, vr, vc
+           in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_vr = tdef.unflatten([o[1] for o in out])
+    new_vc = tdef.unflatten([o[2] for o in out])
+    return new_p, {"vr": new_vr, "vc": new_vc, "step": step}

@@ -1,0 +1,209 @@
+"""Distributed train step factory.
+
+Composition, outermost to innermost:
+
+  pjit (params FSDP x TP, batch over (pod, data))
+    └─ [optional] shard_map over 'pod' (auto: data, model)
+         └─ per-pod grad via microbatch-scan accumulation
+         └─ cross-pod grad all-reduce:
+              plain psum | int8 error-feedback compressed psum
+              x straggler masking (per-pod health weights)
+    └─ global-norm clip -> AdamW / Adafactor update
+
+With compress_pods=False and one pod the shard_map layer disappears and
+gradients flow through GSPMD's implicit reductions.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.registry import ModelBundle
+from repro.training import optimizer as opt_lib
+from repro.training.compression import compressed_psum, init_ef_state
+from repro.training.optimizer import OptConfig
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    compress_pods: bool = False     # int8 EF compression on the pod axis
+    straggler_masking: bool = False  # drop unhealthy pods from the psum
+    donate: bool = True
+    # gradient accumulator dtype. f32 is exact; bf16 halves the largest
+    # single temp buffer of a 405B-class train step (the sharded grad
+    # tree) at ~1e-3 relative accumulation error over 16 microbatches —
+    # measured in tests/test_training.py::test_bf16_accumulation_error
+    accum_dtype: str = "f32"
+
+
+def _grad_fn(bundle: ModelBundle, mesh):
+    def loss_fn(params, batch):
+        loss, metrics = bundle.loss(params, batch, mesh=mesh)
+        return loss, metrics
+    return jax.value_and_grad(loss_fn, has_aux=True)
+
+
+def _accumulate(grad_fn, params, batch, n_micro: int,
+                accum_dtype=jnp.float32):
+    """Microbatch gradient accumulation via lax.scan."""
+    if n_micro == 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, jax.tree.map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        (loss, _), grads = grad_fn(params, mb)
+        g_acc = jax.tree.map(
+            lambda a, g: a + (g / n_micro).astype(accum_dtype),
+            g_acc, grads)
+        return (loss_acc + loss / n_micro, g_acc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), micro)
+    return loss, {"ce": loss}, grads
+
+
+def make_train_step(bundle: ModelBundle, mesh, rules, tcfg: TrainConfig,
+                    act_ctx=None):
+    """Returns (train_step, state_factory) jitted for the mesh.
+
+    train_step(params, opt_state, batch [, ef, pod_health]) ->
+        (params, opt_state [, ef], metrics)
+
+    ``act_ctx``: zero-arg context-manager factory entered at trace time —
+    used to install activation-sharding constraints (launch/steps.py).
+    """
+    act_ctx = act_ctx or contextlib.nullcontext
+    grad_fn = _grad_fn(bundle, mesh)
+    accum_dtype = jnp.bfloat16 if tcfg.accum_dtype == "bf16" \
+        else jnp.float32
+    has_pod = "pod" in mesh.axis_names
+    n_pods = mesh.shape.get("pod", 1) if has_pod else 1
+    use_pod_sm = tcfg.compress_pods or tcfg.straggler_masking
+
+    param_specs = bundle.param_specs(rules)
+    pshapes = bundle.param_shapes()
+    opt_specs = opt_lib.match_opt_specs(tcfg.opt, pshapes, param_specs)
+    batch_spec = rules.batch_spec(None)
+
+    def opt_apply(params, opt_state, grads):
+        grads, gnorm = opt_lib.clip_by_global_norm(grads,
+                                                   tcfg.opt.grad_clip)
+        params, opt_state = opt_lib.apply_update(
+            tcfg.opt, params, grads, opt_state)
+        return params, opt_state, gnorm
+
+    if not use_pod_sm:
+        def train_step(params, opt_state, batch):
+            with act_ctx():
+                loss, metrics, grads = _accumulate(
+                    grad_fn, params, batch, tcfg.microbatches,
+                    accum_dtype)
+            params, opt_state, gnorm = opt_apply(params, opt_state, grads)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        step = jax.jit(
+            train_step,
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), opt_specs,
+                             is_leaf=lambda x: isinstance(x, P)),
+                None,  # batch sharding comes in on the arguments
+            ),
+            donate_argnums=(0, 1) if tcfg.donate else (),
+        )
+        return step
+
+    # ---- pod-manual variant: compression / straggler masking ----
+    # shard_map is manual over 'pod' ONLY (axis_names={'pod'}); data/model
+    # stay auto so GSPMD shards the inner model exactly as in the plain
+    # path. in/out specs therefore reference only the pod axis: params and
+    # grads are pod-replicated (P()), batch and health are pod-split.
+    rep = jax.tree.map(lambda _: P(), param_specs)
+
+    def pod_local(params, batch, health):
+        """Runs per pod. health: (1,) f32 slice of the per-pod weights."""
+        batch = jax.tree.map(lambda x: x, batch)
+        with act_ctx():
+            loss, metrics, grads = _accumulate(
+                grad_fn, params, batch, tcfg.microbatches, accum_dtype)
+        w = health[0] if tcfg.straggler_masking else jnp.float32(1.0)
+        wsum = jax.lax.psum(w, "pod")
+        grads = jax.tree.map(lambda g: g * w, grads)
+        return loss, grads, wsum
+
+    def train_step(params, opt_state, batch, ef, health):
+        if tcfg.compress_pods:
+            def inner(params, batch, ef, health):
+                loss, grads, wsum = pod_local(params, batch, health)
+                grads, ef = compressed_psum(grads, ef, "pod", n_pods)
+                # compressed_psum divides by n_pods; renormalize by the
+                # healthy-pod weight sum
+                grads = jax.tree.map(
+                    lambda g: g * (n_pods / jnp.maximum(wsum, 1.0)), grads)
+                loss = jax.lax.pmean(loss, "pod")
+                return loss, grads, ef
+
+            sm = jax.shard_map(
+                inner, mesh=mesh,
+                in_specs=(rep, P("pod"), rep, P("pod")),
+                out_specs=(P(), rep, rep),
+                check_vma=False,
+                axis_names=frozenset({"pod"}),
+            )
+            loss, grads, ef = sm(params, batch, ef, health)
+        else:
+            def inner(params, batch, health):
+                loss, grads, wsum = pod_local(params, batch, health)
+                grads = jax.tree.map(
+                    lambda g: jax.lax.psum(g, "pod")
+                    / jnp.maximum(wsum, 1.0), grads)
+                loss = jax.lax.pmean(loss, "pod")
+                return loss, grads
+
+            sm = jax.shard_map(
+                inner, mesh=mesh,
+                in_specs=(rep, P("pod"), P("pod")),
+                out_specs=(P(), rep),
+                check_vma=False,
+                axis_names=frozenset({"pod"}),
+            )
+            loss, grads = sm(params, batch, health)
+        params, opt_state, gnorm = opt_apply(params, opt_state, grads)
+        return params, opt_state, ef, {"loss": loss, "gnorm": gnorm}
+
+    return jax.jit(
+        train_step,
+        donate_argnums=(0, 1, 3) if tcfg.donate else (),
+    )
+
+
+def init_train_state(bundle: ModelBundle, mesh, rules, tcfg: TrainConfig,
+                     rng=None, abstract: bool = False):
+    """(params, opt_state [, ef]) — abstract=True gives ShapeDtypeStructs."""
+    if abstract:
+        params = bundle.param_shapes()
+        opt_state = jax.eval_shape(
+            partial(opt_lib.init_opt_state, tcfg.opt), params)
+        ef = (jax.eval_shape(init_ef_state, params)
+              if tcfg.compress_pods else None)
+        return params, opt_state, ef
+    params = bundle.init(rng or jax.random.key(0))
+    opt_state = opt_lib.init_opt_state(tcfg.opt, params)
+    ef = init_ef_state(params) if tcfg.compress_pods else None
+    return params, opt_state, ef

@@ -1,0 +1,23 @@
+"""Pytree bookkeeping helpers used by trainer / checkpoint / roofline."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _leaf_bytes(x) -> int:
+    shape = getattr(x, "shape", ())
+    dtype = getattr(x, "dtype", np.dtype("float32"))
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(_leaf_bytes(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_param_count(tree) -> int:
+    return sum(
+        int(np.prod(getattr(x, "shape", ()), dtype=np.int64))
+        for x in jax.tree_util.tree_leaves(tree)
+    )

@@ -1,0 +1,150 @@
+"""Property tests (hypothesis): structural invariants of the GSON state.
+
+Invariants, maintained by every topology op and by the multi-signal step:
+  I1  nbr symmetry: j in nbr[i] <=> i in nbr[j]
+  I2  age symmetry: age(i->j) == age(j->i)
+  I3  no self edges, no duplicate slots within a row
+  I4  edges only between active units
+  I5  winner lock: exactly one surviving signal per distinct winner
+  I6  signal accounting: selected + discarded == m
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gson import topology as topo
+from repro.core.gson.multi import (multi_signal_step_impl, winner_lock)
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams, init_state
+
+C, K = 64, 8
+
+
+def assert_invariants(nbr, age, active=None):
+    nbr = np.asarray(nbr)
+    age = np.asarray(age)
+    n = nbr.shape[0]
+    for i in range(n):
+        row = [v for v in nbr[i] if v >= 0]
+        assert len(row) == len(set(row)), f"dup neighbor in row {i}"
+        assert i not in row, f"self edge at {i}"
+        for slot, j in enumerate(nbr[i]):
+            if j < 0:
+                continue
+            back = np.nonzero(nbr[j] == i)[0]
+            assert back.size == 1, f"asymmetric edge ({i},{j})"
+            assert age[i, slot] == pytest.approx(
+                age[j, back[0]], abs=1e-6), f"age mismatch ({i},{j})"
+            if active is not None:
+                act = np.asarray(active)
+                assert act[i] and act[j], f"edge to inactive ({i},{j})"
+
+
+@st.composite
+def edge_batches(draw):
+    m = draw(st.integers(1, 24))
+    a = draw(st.lists(st.integers(0, C - 1), min_size=m, max_size=m))
+    b = draw(st.lists(st.integers(0, C - 1), min_size=m, max_size=m))
+    mask = draw(st.lists(st.booleans(), min_size=m, max_size=m))
+    return (jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32),
+            jnp.asarray(mask))
+
+
+@settings(max_examples=25, deadline=None)
+@given(batches=st.lists(edge_batches(), min_size=1, max_size=4))
+def test_insert_remove_expire_preserve_symmetry(batches):
+    nbr = jnp.full((C, K), -1, jnp.int32)
+    age = jnp.zeros((C, K), jnp.float32)
+    for a, b, mask in batches:
+        nbr, age, _ = topo.insert_edges(nbr, age, a, b, mask)
+        assert_invariants(nbr, age)
+        # age half the rows' incident edges, then expire
+        age = topo.age_incident_edges(nbr, age, a, mask, amount=20.0)
+        assert_invariants(nbr, age)
+        nbr, age, _ = topo.expire_edges(nbr, age, 30.0)
+        assert_invariants(nbr, age)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_winner_lock_one_survivor_per_winner(data):
+    m = data.draw(st.integers(1, 64))
+    wid = jnp.asarray(
+        data.draw(st.lists(st.integers(0, C - 1), min_size=m, max_size=m)),
+        jnp.int32)
+    rng = jax.random.key(data.draw(st.integers(0, 2**31 - 1)))
+    selected, _prio = winner_lock(rng, wid, C)
+    selected = np.asarray(selected)
+    wid = np.asarray(wid)
+    for w in np.unique(wid):
+        assert np.sum(selected[wid == w]) == 1, \
+            f"winner {w}: {np.sum(selected[wid == w])} survivors"
+    assert np.sum(selected) == len(np.unique(wid))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_steps=st.integers(1, 4),
+       model=st.sampled_from(["gng", "gwr", "soam"]))
+def test_multi_signal_step_preserves_invariants(seed, n_steps, model):
+    p = GSONParams(model=model, insertion_threshold=0.4)
+    sampler = make_sampler("sphere")
+    rng = jax.random.key(seed)
+    rng, k = jax.random.split(rng)
+    st_ = init_state(k, capacity=C, dim=3, max_deg=K,
+                     seed_points=sampler(jax.random.key(1), 2),
+                     init_threshold=p.insertion_threshold)
+    m = 32
+    for i in range(n_steps):
+        rng, ks = jax.random.split(rng)
+        sig = sampler(ks, m)
+        st_ = multi_signal_step_impl(st_, sig, p, refresh_states=False)
+        assert_invariants(st_.nbr, st_.age, st_.active)
+        # I6: signal accounting
+        assert int(st_.signal_count) == (i + 1) * m
+        assert 0 <= int(st_.discarded) <= int(st_.signal_count)
+        # active count consistent
+        assert int(st_.n_active) == int(jnp.sum(st_.active))
+        # no NaNs in positions
+        assert bool(jnp.all(jnp.isfinite(st_.w)))
+
+
+def test_degrees_and_prune():
+    nbr = jnp.full((8, 4), -1, jnp.int32)
+    age = jnp.zeros((8, 4), jnp.float32)
+    a = jnp.asarray([0, 1], jnp.int32)
+    b = jnp.asarray([1, 2], jnp.int32)
+    nbr, age, d = topo.insert_edges(nbr, age, a, b,
+                                    jnp.asarray([True, True]))
+    assert int(d) == 0
+    assert list(np.asarray(topo.degrees(nbr))[:4]) == [1, 2, 1, 0]
+    active = jnp.ones((8,), bool)
+    firing = jnp.full((8,), 0.5)
+    act2, removed = topo.prune_isolated(active, nbr, firing)
+    assert int(removed) == 5  # units 3..7 have no edges and have fired
+
+
+def test_insert_duplicate_edges_idempotent():
+    nbr = jnp.full((8, 4), -1, jnp.int32)
+    age = jnp.zeros((8, 4), jnp.float32)
+    a = jnp.asarray([0, 0, 1], jnp.int32)
+    b = jnp.asarray([1, 1, 0], jnp.int32)   # same edge three times
+    nbr, age, dropped = topo.insert_edges(
+        nbr, age, a, b, jnp.ones((3,), bool))
+    assert int(dropped) == 0
+    assert int(jnp.sum(nbr >= 0)) == 2      # one edge, two directions
+    assert_invariants(nbr, age)
+
+
+def test_degree_overflow_drops_and_counts():
+    nbr = jnp.full((8, 2), -1, jnp.int32)   # max degree 2
+    age = jnp.zeros((8, 2), jnp.float32)
+    a = jnp.zeros((4,), jnp.int32)          # 4 edges from unit 0
+    b = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    nbr, age, dropped = topo.insert_edges(
+        nbr, age, a, b, jnp.ones((4,), bool))
+    assert int(dropped) == 2                # only 2 fit
+    assert_invariants(nbr, age)
