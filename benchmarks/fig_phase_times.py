@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.gson.multi import (find_winners_reference,
-                                   multi_signal_step)
+                                   multi_signal_step_impl)
 from repro.core.gson.sampling import make_sampler
 from repro.core.gson.state import GSONParams, init_state
 from repro.utils.timing import timed
@@ -36,9 +36,11 @@ def bench_at_size(n_units: int, m: int = 256, capacity: int = 8192):
 
     fw = jax.jit(find_winners_reference)
     _, t_fw = timed(fw, signals, st.w, st.active, n=20, warmup=2)
-    step = lambda s: multi_signal_step(s, signals, p,
-                                       refresh_states=False)
-    _, t_full = timed(step, st, n=5, warmup=1)
+    # undonated jit: the benchmark re-feeds the same state every call
+    # (the production entry point donates it)
+    step_fn = jax.jit(lambda s: multi_signal_step_impl(
+        s, signals, p, refresh_states=False))
+    _, t_full = timed(step_fn, st, n=5, warmup=1)
     return {
         "units": n_units, "m": m,
         "t_find_winners_us": t_fw * 1e6,

@@ -2,12 +2,20 @@
 
   PYTHONPATH=src python -m benchmarks.run [--budget quick|full]
 
-Outputs markdown tables to stdout and JSON to .runs/bench/.
+Outputs markdown tables to stdout, JSON per table to .runs/bench/, and a
+machine-readable aggregate ``BENCH_gson.json`` at the repo root so future
+PRs have a perf trajectory to regress against (per-variant step time,
+per-signal time, convergence stats).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_gson.json")
 
 
 def main(argv=None):
@@ -15,30 +23,61 @@ def main(argv=None):
     ap.add_argument("--budget", default="quick", choices=("quick", "full"))
     ap.add_argument("--only", default=None,
                     help="comma list: convergence,phase,per_signal,"
-                         "update,roofline")
+                         "update,superstep,roofline")
+    ap.add_argument("--out", default=BENCH_JSON,
+                    help="aggregate JSON path (default: repo root)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
         return only is None or name in only
 
+    import jax
+
     t0 = time.time()
+    results = {}
     if want("per_signal"):
         from benchmarks import fig_per_signal
-        fig_per_signal.run()
+        results["per_signal"] = fig_per_signal.run()
     if want("phase"):
         from benchmarks import fig_phase_times
-        fig_phase_times.run()
+        results["phase_times"] = fig_phase_times.run()
     if want("update"):
         from benchmarks import bench_update_phase
-        bench_update_phase.run()
+        results["update_phase"] = bench_update_phase.run()
+    if want("superstep"):
+        from benchmarks import bench_superstep
+        results["superstep"] = bench_superstep.run()
     if want("convergence"):
         from benchmarks import table_convergence
-        table_convergence.run(budget=args.budget)
+        results["convergence"] = table_convergence.run(budget=args.budget)
     if want("roofline"):
         from benchmarks import roofline_table
-        roofline_table.run()
-    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
+        results["roofline"] = roofline_table.run()
+
+    # partial (--only) runs MERGE into the existing aggregate instead of
+    # clobbering the tables they didn't produce — BENCH_gson.json is the
+    # perf trajectory future PRs regress against
+    merged = dict(results)
+    if only and os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f).get("results", {})
+            merged = {**prev, **results}
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload = {
+        "generated_by": "benchmarks.run",
+        "budget": args.budget,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "wall_seconds": round(time.time() - t0, 1),
+        "results": merged,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"\n[benchmarks] aggregate written to {args.out}")
+    print(f"[benchmarks] done in {time.time() - t0:.1f}s")
 
 
 if __name__ == "__main__":

@@ -3,10 +3,12 @@
   PYTHONPATH=src python examples/surface_reconstruction.py \
       --surface eight --variant multi --iters 1500 --out eight.obj
 
-Runs the chosen implementation (single / indexed / multi / kernel) to
-convergence, validates the reconstructed topology (Euler characteristic
-vs the surface's known genus), and exports the triangulation as a
-Wavefront .obj you can open in any mesh viewer.
+Runs the chosen implementation (single / indexed / multi / multi-fused /
+kernel) to convergence, validates the reconstructed topology (Euler
+characteristic vs the surface's known genus), and exports the
+triangulation as a Wavefront .obj you can open in any mesh viewer.
+``multi-fused`` runs the whole iterate-sample-converge loop on device
+(see src/repro/core/gson/superstep.py and EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ from repro.core.gson import metrics
 from repro.core.gson.engine import EngineConfig, GSONEngine
 from repro.core.gson.sampling import SURFACES, make_sampler
 from repro.core.gson.state import GSONParams
+from repro.core.gson.superstep import SuperstepConfig
 from repro.kernels.find_winners.ops import make_pallas_find_winners
 
 GENUS = {"sphere": 0, "torus": 1, "eight": 2, "trefoil": 1}
@@ -54,7 +57,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--surface", default="sphere", choices=SURFACES)
     ap.add_argument("--variant", default="multi",
-                    choices=("single", "indexed", "multi", "kernel"))
+                    choices=("single", "indexed", "multi", "multi-fused",
+                             "kernel"))
+    ap.add_argument("--superstep", type=int, default=64,
+                    help="iterations per device call (multi-fused)")
     ap.add_argument("--iters", type=int, default=800)
     ap.add_argument("--capacity", type=int, default=768)
     ap.add_argument("--seed", type=int, default=42)
@@ -73,6 +79,7 @@ def main(argv=None):
                           age_max=64.0, eps_b=0.1, eps_n=0.01,
                           stuck_window=60),
         capacity=args.capacity, max_deg=16, variant=variant,
+        superstep=SuperstepConfig(length=args.superstep),
         check_every=25, refresh_every=2, max_iterations=args.iters)
     eng = GSONEngine(cfg, make_sampler(args.surface), find_winners=fw)
     state, stats = eng.run(jax.random.key(args.seed), verbose=True)

@@ -6,3 +6,5 @@ from repro.core.gson.multi import (find_winners_reference,
                                    winner_lock)
 from repro.core.gson.single import single_signal_scan
 from repro.core.gson.state import GSONParams, NetworkState, init_state
+from repro.core.gson.superstep import (SuperstepConfig, SuperstepResult,
+                                       run_superstep)

@@ -4,14 +4,22 @@ Implements the paper's experimental protocol:
   * multi-signal runs use m = smallest power of two > current unit count,
     capped at ``params.max_parallel`` (8192 in the paper) — bucketing m
     keeps the number of distinct jit signatures <= log2(cap);
+  * ``multi-fused`` executes the same schedule entirely on device: the
+    fused superstep (see ``superstep.py``) runs ``superstep.length``
+    iterations — sampling, masked m-schedule, topology refresh and the
+    convergence predicate included — per device call, eliminating the
+    per-iteration dispatch + sync overhead of the host loop;
   * single-signal runs scan signals one at a time in chunks;
   * SOAM terminates on the topology criterion (all units disk/patch),
     GNG/GWR on a quantization-error threshold against probe signals;
   * per-phase wall times (Sample / Find Winners+Update / Convergence) and
-    convergence statistics are recorded for the benchmark tables.
+    convergence statistics are recorded for the benchmark tables. The
+    fused variant cannot split phases (that is the point) — its whole
+    superstep time is accounted under ``time_step``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 
@@ -25,10 +33,8 @@ from repro.core.gson.multi import (multi_signal_step, refresh_topology,
                                    soam_converged)
 from repro.core.gson.single import single_signal_scan
 from repro.core.gson.state import GSONParams, init_state
-
-
-def next_pow2(n: int) -> int:
-    return 1 << max(int(n), 1).bit_length()
+from repro.core.gson.superstep import (SuperstepConfig, next_pow2,
+                                       run_superstep)
 
 
 @dataclass
@@ -58,7 +64,8 @@ class EngineConfig:
     capacity: int = 4096
     max_deg: int = 16
     dim: int = 3
-    variant: str = "multi"        # "multi" | "single" | "indexed"
+    variant: str = "multi"   # "multi" | "multi-fused" | "single" | "indexed"
+    superstep: SuperstepConfig = SuperstepConfig()  # multi-fused only
     fixed_m: int | None = None    # override the paper's m schedule
     chunk: int = 256              # signals per device call in single/indexed
     check_every: int = 10         # iterations between convergence checks
@@ -99,9 +106,23 @@ class GSONEngine:
             ok = bool(soam_converged(state))
             qe = float(metrics.quantization_error(state, probes))
             return ok, qe, state
-        qe = float(metrics.quantization_error(state, probes))
-        return (qe < self.cfg.qe_threshold
-                and int(state.n_active) > 8), qe, state
+        done, qe = metrics.qe_convergence(state, probes,
+                                          self.cfg.qe_threshold)
+        return bool(done), float(qe), state
+
+    def _resolved_superstep(self) -> SuperstepConfig:
+        """The engine's convergence/refresh knobs are the single source
+        of truth; ``cfg.superstep`` only contributes the fused-loop
+        shape (length, buffer size, early-exit form)."""
+        cfg = self.cfg
+        ss = cfg.superstep.resolve(cfg.capacity, cfg.params)
+        return dataclasses.replace(
+            ss,
+            refresh_every=cfg.refresh_every,
+            check_every=cfg.check_every,
+            qe_threshold=cfg.qe_threshold,
+            min_m=cfg.min_m,
+            fixed_m=cfg.fixed_m if cfg.fixed_m is not None else ss.fixed_m)
 
     def run(self, rng: jax.Array, verbose: bool = False):
         cfg, p = self.cfg, self.cfg.params
@@ -115,6 +136,69 @@ class GSONEngine:
 
         stats = RunStats()
         t_start = time.perf_counter()
+        if cfg.variant == "multi-fused":
+            state, it = self._fused_loop(state, rng, probes, stats, verbose)
+        else:
+            state, it = self._host_loop(state, rng, probes, stats, verbose)
+
+        stats.iterations = it
+        stats.signals = int(state.signal_count)
+        stats.discarded = int(state.discarded)
+        stats.units = int(state.n_active)
+        stats.connections = metrics.edge_count(state)
+        stats.time_total = time.perf_counter() - t_start
+        if np.isnan(stats.quantization_error):
+            stats.quantization_error = float(
+                metrics.quantization_error(state, probes))
+        return state, stats
+
+    def _fused_loop(self, state, rng, probes, stats: RunStats,
+                    verbose: bool):
+        """One device call per ``superstep.length`` iterations; the host
+        only reads back scalars (iteration count, convergence flag, QE)
+        between supersteps."""
+        cfg, p = self.cfg, self.cfg.params
+        ss = self._resolved_superstep()
+        it = 0
+        while (it < cfg.max_iterations
+               and int(state.signal_count) < cfg.max_signals):
+            # bound by BOTH remaining budgets: iterations, and signals
+            # (worst case one iteration consumes max_parallel signals) —
+            # overshoot is then at most one iteration's m, like the
+            # host loop
+            sig_left = cfg.max_signals - int(state.signal_count)
+            length = max(1, min(ss.length, cfg.max_iterations - it,
+                                -(-sig_left // ss.max_parallel)))
+            t0 = time.perf_counter()
+            res = run_superstep(
+                state, rng, probes, it,
+                sampler=self.sampler, params=p,
+                cfg=dataclasses.replace(ss, length=length),
+                find_winners=self.find_winners)
+            state, rng = res.state, res.rng
+            state.w.block_until_ready()
+            stats.time_step += time.perf_counter() - t0
+            it += int(res.iterations)
+            qe = float(res.qe)
+            stats.history.append({
+                "iteration": it,
+                "units": int(state.n_active),
+                "signals": int(state.signal_count),
+                "qe": qe,
+            })
+            if verbose:
+                h = stats.history[-1]
+                print(f"  it={h['iteration']:6d} units={h['units']:6d} "
+                      f"signals={h['signals']:9d} qe={h['qe']:.5f}")
+            if bool(res.converged):
+                stats.converged = True
+                stats.quantization_error = qe
+                break
+        return state, it
+
+    def _host_loop(self, state, rng, probes, stats: RunStats,
+                   verbose: bool):
+        cfg, p = self.cfg, self.cfg.params
         it = 0
         while (it < cfg.max_iterations
                and int(state.signal_count) < cfg.max_signals):
@@ -175,14 +259,4 @@ class GSONEngine:
                     stats.converged = True
                     stats.quantization_error = qe
                     break
-
-        stats.iterations = it
-        stats.signals = int(state.signal_count)
-        stats.discarded = int(state.discarded)
-        stats.units = int(state.n_active)
-        stats.connections = metrics.edge_count(state)
-        stats.time_total = time.perf_counter() - t_start
-        if np.isnan(stats.quantization_error):
-            stats.quantization_error = float(
-                metrics.quantization_error(state, probes))
-        return state, stats
+        return state, it

@@ -22,6 +22,18 @@ def quantization_error(state: NetworkState, probes: jax.Array) -> jax.Array:
     return jnp.mean(jnp.maximum(jnp.min(d2, axis=1), 0.0))
 
 
+def qe_convergence(state: NetworkState, probes: jax.Array,
+                   threshold: float) -> tuple[jax.Array, jax.Array]:
+    """GNG/GWR termination predicate: (done, qe), both device scalars.
+
+    Shared by the host engine loop and the fused on-device superstep so
+    the two paths cannot drift.
+    """
+    qe = quantization_error(state, probes)
+    done = (qe < threshold) & (state.n_active > 8)
+    return done, qe
+
+
 def edge_count(state: NetworkState) -> int:
     return int(np.sum(np.asarray(state.nbr) >= 0)) // 2
 

@@ -61,17 +61,27 @@ def find_winners_reference(signals: jax.Array, w: jax.Array,
     return (wid, sid, jnp.maximum(d2b, 0.0), jnp.maximum(d2s, 0.0))
 
 
-def winner_lock(rng: jax.Array, winner_ids: jax.Array, capacity: int):
+def winner_lock(rng: jax.Array, winner_ids: jax.Array, capacity: int,
+                mask: jax.Array | None = None):
     """Paper's collision rule: one surviving signal per distinct winner.
 
     Uses unique random priorities + scatter-min: deterministic, and the
     survivor is uniformly random among colliding signals — matching the
     'first incoming signal, in a random order' semantics of the paper.
+
+    ``mask``: (m,) bool — rows with mask False never survive and never
+    out-prioritize a valid row (the fused superstep runs a fixed-size
+    signal buffer with only the first ``m_t`` rows valid).
     """
     m = winner_ids.shape[0]
     prio = jax.random.permutation(rng, m).astype(jnp.int32)
+    if mask is not None:
+        prio = jnp.where(mask, prio, _BIG32)
     best = jnp.full((capacity,), _BIG32, jnp.int32).at[winner_ids].min(prio)
-    return prio == best[winner_ids], prio
+    selected = prio == best[winner_ids]
+    if mask is not None:
+        selected = selected & mask
+    return selected, prio
 
 
 def refresh_topology(state: NetworkState, params: GSONParams) -> NetworkState:
@@ -106,16 +116,28 @@ def multi_signal_step_impl(
     params: GSONParams,
     refresh_states: bool = True,
     find_winners: FindWinnersFn | None = None,
+    signal_mask: jax.Array | None = None,
 ) -> NetworkState:
     """One multi-signal iteration. ``signals``: (m, dim) float32.
 
     Un-jitted implementation — compose freely inside scans / shard_map.
     ``multi_signal_step`` below is the jitted entry point.
+
+    ``signal_mask``: optional (m,) bool. Rows with mask False are inert:
+    they never win the lock, never adapt/insert, and are not counted as
+    consumed signals. This is how the fused superstep keeps a single jit
+    signature while the paper's m-schedule varies per iteration — the
+    signal buffer has a static ``max_parallel`` rows and the mask selects
+    the first ``m_t`` of them. A masked call with k valid rows is
+    equivalent to an unmasked call with those k signals (up to the
+    random priorities used for collision resolution).
     """
     if find_winners is None:
         find_winners = find_winners_reference
     C, K = state.capacity, state.max_deg
     m = signals.shape[0]
+    m_eff = m if signal_mask is None else (
+        jnp.sum(signal_mask).astype(jnp.int32))
     is_gng = params.model == "gng"
     is_soam = params.model == "soam"
 
@@ -125,7 +147,7 @@ def multi_signal_step_impl(
     wid, sid, d2b, _ = find_winners(signals, state.w, state.active)
 
     # ---- 2. winner lock --------------------------------------------------
-    selected, prio = winner_lock(k_lock, wid, C)
+    selected, prio = winner_lock(k_lock, wid, C, signal_mask)
     n_sel = jnp.sum(selected).astype(jnp.int32)
     dist_b = jnp.sqrt(d2b)
 
@@ -291,8 +313,8 @@ def multi_signal_step_impl(
         w=w, active=active, nbr=nbr, age=age, error=error, firing=firing,
         threshold=threshold, topo_state=topo_state,
         inconsistent_for=inconsistent, n_active=n_active,
-        signal_count=state.signal_count + m,
-        discarded=state.discarded + (m - n_sel),
+        signal_count=state.signal_count + m_eff,
+        discarded=state.discarded + (m_eff - n_sel),
         dropped_edges=dropped_edges, dropped_units=dropped_units, rng=rng,
     )
     # ---- 3i. SOAM: topology states + adaptive insertion threshold --------
@@ -301,9 +323,16 @@ def multi_signal_step_impl(
     return out
 
 
+# ``state`` is donated: NetworkState is by far the largest buffer in the
+# hot loop and every caller rebinds it (``state = multi_signal_step(state,
+# ...)``), so XLA updates the pool in place instead of copying it each
+# call. Donation invalidates the caller's input buffers — re-feeding the
+# same state must go through ``multi_signal_step_impl`` (un-jitted or
+# under a caller-owned jit), as the benchmarks do.
 multi_signal_step = jax.jit(
     multi_signal_step_impl,
-    static_argnames=("params", "refresh_states", "find_winners"))
+    static_argnames=("params", "refresh_states", "find_winners"),
+    donate_argnames=("state",))
 
 
 def soam_converged(state: NetworkState) -> jax.Array:

@@ -14,6 +14,7 @@ All samplers return (n, 3) float32 and are deterministic in the PRNG key.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -34,9 +35,26 @@ def sample(name: str, rng: jax.Array, n: int) -> jax.Array:
     raise ValueError(f"unknown surface {name!r}; options: {SURFACES}")
 
 
-def make_sampler(name: str):
-    """Returns sampler(rng, n) -> (n, 3) f32 for the named surface."""
-    return functools.partial(sample, name)
+@functools.lru_cache(maxsize=None)
+def make_sampler(name: str) -> "SurfaceSampler":
+    """Returns sampler(rng, n) -> (n, 3) f32 for the named surface.
+
+    The returned object hashes and compares by surface name, so it is a
+    stable ``static_argnames`` key for jitted callers (the fused
+    superstep closes over the sampler inside ``lax.scan`` — an
+    identity-hashed closure would retrace per engine instance).
+    """
+    if name not in SURFACES:
+        raise ValueError(f"unknown surface {name!r}; options: {SURFACES}")
+    return SurfaceSampler(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class SurfaceSampler:
+    name: str
+
+    def __call__(self, rng: jax.Array, n: int) -> jax.Array:
+        return sample(self.name, rng, n)
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.gson.multi import (FindWinnersFn, multi_signal_step,
+from repro.core.gson.multi import (FindWinnersFn, multi_signal_step_impl,
                                    refresh_topology)
 from repro.core.gson.state import GSONParams, NetworkState
 
@@ -33,8 +33,11 @@ def single_signal_scan(
     def body(carry, xs):
         st, i = carry
         sig = xs[None, :]
-        st = multi_signal_step(st, sig, params, refresh_states=False,
-                               find_winners=find_winners)
+        # the un-jitted impl: this scan is already inside a jit, and the
+        # public entry point's buffer donation has no meaning on traced
+        # carries (an m=1 step never takes the masked path)
+        st = multi_signal_step_impl(st, sig, params, refresh_states=False,
+                                    find_winners=find_winners)
         if is_soam:
             st = jax.lax.cond(
                 (i + 1) % refresh_every == 0,

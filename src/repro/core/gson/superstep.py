@@ -1,0 +1,217 @@
+"""Fused on-device superstep: S multi-signal iterations per device call.
+
+The host driver in ``engine.py`` re-crosses the host<->device boundary
+every iteration: a ``block_until_ready`` after sampling, another after
+the step, and a Python-side ``int(state.n_active)`` read to pick the
+paper's m-schedule. For the small networks where the multi-signal
+variant wins biggest, dispatch + sync latency dominates step time, so
+the whole iterate-sample-converge loop moves on device here:
+
+  * sampling happens inside the loop body (the samplers in
+    ``sampling.py`` are pure JAX), with the PRNG key threaded through
+    the carry;
+  * the m-schedule is computed on device: the signal buffer has a
+    static ``(max_parallel, dim)`` shape and a validity mask selects the
+    first ``m_t = next_pow2(n_active)`` rows, replacing the host-side
+    power-of-two retrace buckets — one jit signature for the whole run;
+  * SOAM's ``refresh_topology`` runs periodically via ``lax.cond`` on
+    the iteration counter;
+  * the convergence predicate (SOAM topology criterion or quantization
+    error) is evaluated on device every ``check_every`` iterations,
+    enabling early exit in the ``lax.while_loop`` form.
+
+Two forms share one body: ``lax.while_loop`` (early exit, the engine's
+default) and ``lax.scan`` (fixed length, returns a per-iteration
+``n_active`` history for benchmarks). Both stop evolving the carry once
+converged, so they produce bit-identical final states.
+
+``NetworkState`` is donated, so the unit pool updates in place across
+superstep calls instead of being copied.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gson import metrics
+from repro.core.gson.multi import (FindWinnersFn, multi_signal_step_impl,
+                                   refresh_topology, soam_converged)
+from repro.core.gson.state import GSONParams, NetworkState
+
+_NO_POW = jnp.int32(1 << 30)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two strictly greater than n (host-side)."""
+    return 1 << max(int(n), 1).bit_length()
+
+
+@dataclass(frozen=True)
+class SuperstepConfig:
+    """Static configuration of one fused superstep (a jit cache key).
+
+    ``max_parallel`` is the static row count of the on-device signal
+    buffer; ``None`` means "derive from capacity" via :meth:`resolve`.
+    """
+
+    length: int = 64              # iterations per device call
+    max_parallel: int | None = None   # signal buffer rows (static shape)
+    min_m: int = 4                # floor of the m-schedule
+    fixed_m: int | None = None    # override the paper's m-schedule
+    refresh_every: int = 5        # SOAM topo refresh cadence (iterations)
+    check_every: int = 10         # convergence-check cadence (iterations)
+    qe_threshold: float = 1e-3    # GNG/GWR convergence
+    early_exit: bool = True       # while_loop form vs fixed-length scan
+
+    def __post_init__(self):
+        if self.length < 1:
+            raise ValueError(
+                f"superstep length must be >= 1, got {self.length} "
+                "(a zero-length superstep makes no progress)")
+
+    def resolve(self, capacity: int, params: GSONParams) -> "SuperstepConfig":
+        """Fill the derived buffer size: the m-schedule never exceeds
+        ``next_pow2(capacity)`` (n_active <= capacity) nor the paper's
+        ``max_parallel`` cap, so that is all the buffer ever needs."""
+        if self.max_parallel is not None:
+            return self
+        return dataclasses.replace(
+            self,
+            max_parallel=min(params.max_parallel, next_pow2(capacity)))
+
+
+class SuperstepResult(NamedTuple):
+    state: NetworkState
+    rng: jax.Array          # advanced sampling key
+    iterations: jax.Array   # () i32 iterations actually executed
+    converged: jax.Array    # () bool
+    qe: jax.Array           # () f32 last checked QE (nan if never checked)
+    history: jax.Array | None   # (length,) i32 n_active per iter (scan form)
+
+
+def device_m_schedule(n_active: jax.Array, cfg: SuperstepConfig) -> jax.Array:
+    """The paper's m-schedule, on device: smallest power of two greater
+    than ``n_active``, clipped to [min_m, max_parallel]."""
+    cap = jnp.int32(cfg.max_parallel)
+    if cfg.fixed_m is not None:
+        return jnp.minimum(jnp.int32(cfg.fixed_m), cap)
+    pows = jnp.asarray(
+        [1 << k for k in range(max(cfg.max_parallel.bit_length(), 1))],
+        jnp.int32)
+    above = jnp.where(pows > n_active, pows, _NO_POW)
+    m = jnp.minimum(jnp.min(above), cap)
+    return jnp.maximum(m, jnp.int32(min(cfg.min_m, cfg.max_parallel)))
+
+
+def _iterate(state: NetworkState, k_sig: jax.Array, it: jax.Array, *,
+             sampler, params: GSONParams, cfg: SuperstepConfig,
+             find_winners: FindWinnersFn | None) -> NetworkState:
+    """One fused iteration: sample -> masked multi-signal step -> cond
+    topology refresh. ``it`` is the global iteration counter (so the
+    refresh cadence is continuous across superstep calls)."""
+    signals = sampler(k_sig, cfg.max_parallel)
+    m_t = device_m_schedule(state.n_active, cfg)
+    mask = jnp.arange(cfg.max_parallel, dtype=jnp.int32) < m_t
+    state = multi_signal_step_impl(
+        state, signals, params, refresh_states=False,
+        find_winners=find_winners, signal_mask=mask)
+    if params.model == "soam":
+        state = jax.lax.cond(
+            it % cfg.refresh_every == 0,
+            lambda s: refresh_topology(s, params),
+            lambda s: s,
+            state)
+    return state
+
+
+def _convergence_check(state: NetworkState, probes: jax.Array, *,
+                       params: GSONParams, cfg: SuperstepConfig):
+    """(state, done, qe) — SOAM topology criterion (on a fresh state
+    ladder) or quantization error, all on device."""
+    if params.model == "soam":
+        state = refresh_topology(state, params)
+        done = soam_converged(state)
+        qe = metrics.quantization_error(state, probes)
+        return state, done, qe
+    done, qe = metrics.qe_convergence(state, probes, cfg.qe_threshold)
+    return state, done, qe
+
+
+def _body(carry, probes, it0, *, sampler, params, cfg, find_winners):
+    state, rng, it, done, qe = carry
+    rng, k_sig = jax.random.split(rng)
+    state = _iterate(state, k_sig, it0 + it, sampler=sampler, params=params,
+                     cfg=cfg, find_winners=find_winners)
+    it = it + 1
+
+    def check(args):
+        s, _, _ = args
+        return _convergence_check(s, probes, params=params, cfg=cfg)
+
+    # cadence on the GLOBAL counter so checks stay continuous across
+    # superstep calls even when a partial-length superstep runs last
+    state, done, qe = jax.lax.cond(
+        (it0 + it) % cfg.check_every == 0, check, lambda args: args,
+        (state, done, qe))
+    return state, rng, it, done, qe
+
+
+def _init_carry(state: NetworkState, rng: jax.Array):
+    return (state, rng, jnp.int32(0), jnp.asarray(False),
+            jnp.float32(jnp.nan))
+
+
+@partial(jax.jit,
+         static_argnames=("sampler", "params", "cfg", "find_winners"),
+         donate_argnames=("state",))
+def run_superstep(
+    state: NetworkState,
+    rng: jax.Array,
+    probes: jax.Array,
+    it0: jax.Array | int = 0,
+    *,
+    sampler,
+    params: GSONParams,
+    cfg: SuperstepConfig,
+    find_winners: FindWinnersFn | None = None,
+) -> SuperstepResult:
+    """Execute up to ``cfg.length`` fused iterations in ONE device call.
+
+    ``sampler`` must be pure JAX and hashable (see
+    ``sampling.SurfaceSampler``); ``probes`` is the fixed probe set for
+    the convergence predicate; ``it0`` the global iteration offset.
+
+    ``early_exit=True`` lowers to ``lax.while_loop`` and stops at the
+    first satisfied convergence check; ``early_exit=False`` lowers to
+    ``lax.scan`` over exactly ``length`` steps (iterations after
+    convergence are frozen no-ops) and additionally returns the
+    per-iteration ``n_active`` history.
+    """
+    if cfg.max_parallel is None:
+        raise ValueError("SuperstepConfig.max_parallel unresolved — call "
+                         "cfg.resolve(capacity, params) first")
+    it0 = jnp.asarray(it0, jnp.int32)
+    body = partial(_body, probes=probes, it0=it0, sampler=sampler,
+                   params=params, cfg=cfg, find_winners=find_winners)
+    carry = _init_carry(state, rng)
+
+    if cfg.early_exit:
+        def cond(c):
+            _, _, it, done, _ = c
+            return (it < cfg.length) & ~done
+
+        state, rng, it, done, qe = jax.lax.while_loop(cond, body, carry)
+        return SuperstepResult(state, rng, it, done, qe, None)
+
+    def scan_body(c, _):
+        new = jax.lax.cond(c[3], lambda c_: c_, body, c)
+        return new, new[0].n_active
+
+    (state, rng, it, done, qe), hist = jax.lax.scan(
+        scan_body, carry, None, length=cfg.length)
+    return SuperstepResult(state, rng, it, done, qe, hist)

@@ -30,6 +30,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 LARGE = 1e30  # plain float: jnp scalars would be captured consts in the kernel
 
+# jax < 0.5 names it TPUCompilerParams; newer releases CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _two_smallest_with_ids(d2: jax.Array, ids: jax.Array):
     """Row-wise two smallest values (+their ids) of (bm, n). Ties -> lowest id."""
@@ -45,13 +49,13 @@ def _two_smallest_with_ids(d2: jax.Array, ids: jax.Array):
             jnp.concatenate([i1, i2], axis=1).astype(jnp.int32))
 
 
-def _find_winners_kernel(x_ref, w_ref, bias_ref, out_d_ref, out_i_ref,
+def _find_winners_kernel(x_ref, w_ref, act_ref, out_d_ref, out_i_ref,
                          *, block_c: int):
     j = pl.program_id(1)
 
     x = x_ref[...]                       # (bm, d)  VMEM
     w = w_ref[...]                       # (bc, d)  VMEM staged tile
-    bias = bias_ref[...]                 # (1, bc)  +LARGE on inactive slots
+    act = act_ref[...]                   # (1, bc)  1.0 active / 0.0 masked
 
     # ||x||^2 - 2 x.w + ||w||^2 — the matmul hits the MXU.
     x2 = jnp.sum(x * x, axis=1, keepdims=True)
@@ -59,7 +63,9 @@ def _find_winners_kernel(x_ref, w_ref, bias_ref, out_d_ref, out_i_ref,
     xw = jax.lax.dot_general(
         x, w, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                       # (bm, bc)
-    d2 = jnp.maximum(x2 - 2.0 * xw + w2, 0.0) + bias
+    # inactive/padded slots masked IN the kernel (bias add, no branch) —
+    # the wrapper no longer materializes a bias row in HBM per call
+    d2 = jnp.maximum(x2 - 2.0 * xw + w2, 0.0) + (1.0 - act) * LARGE
 
     ids = j * block_c + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
     blk_d, blk_i = _two_smallest_with_ids(d2, ids)
@@ -83,7 +89,7 @@ def _find_winners_kernel(x_ref, w_ref, bias_ref, out_d_ref, out_i_ref,
 def find_winners_pallas_padded(
     signals: jax.Array,     # (M, d) f32, M % block_m == 0
     w: jax.Array,           # (C, d) f32, C % block_c == 0
-    bias: jax.Array,        # (1, C) f32, +LARGE on inactive/padded slots
+    act: jax.Array,         # (1, C) f32, 1.0 active / 0.0 inactive-or-pad
     *,
     block_m: int = 256,
     block_c: int = 512,
@@ -108,9 +114,9 @@ def find_winners_pallas_padded(
             jax.ShapeDtypeStruct((m, 2), jnp.float32),
             jax.ShapeDtypeStruct((m, 2), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(signals, w, bias)
+    )(signals, w, act)
     return out_d, out_i

@@ -20,7 +20,11 @@ def find_winners_op(signals: jax.Array, w: jax.Array, active: jax.Array,
     """Top-2 nearest active units for each signal, via the Pallas kernel.
 
     Returns (top2_d2 (m, 2) f32, top2_ids (m, 2) i32).
-    Shapes need not be tile-aligned — padding is handled here.
+    Shapes need not be tile-aligned — but tile-aligned inputs (the fused
+    superstep's static power-of-two signal buffer, pow-of-two capacity
+    pools) pass through with ZERO copies: activity masking happens
+    inside the kernel via the (1, C) activity row, and signals/w are
+    padded only when their static shape is actually misaligned.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -31,13 +35,15 @@ def find_winners_op(signals: jax.Array, w: jax.Array, active: jax.Array,
     mp = _round_up(m, block_m)
     cp = _round_up(c, block_c)
 
-    sig_p = jnp.zeros((mp, d), jnp.float32).at[:m].set(signals)
-    w_p = jnp.zeros((cp, d), jnp.float32).at[:c].set(w)
-    bias = jnp.full((1, cp), LARGE, jnp.float32).at[0, :c].set(
-        jnp.where(active, 0.0, LARGE))
+    if mp != m:
+        signals = jnp.pad(signals, ((0, mp - m), (0, 0)))
+    if cp != c:
+        w = jnp.pad(w, ((0, cp - c), (0, 0)))
+        active = jnp.pad(active, (0, cp - c))   # pad slots are inactive
+    act = active.astype(jnp.float32)[None, :]
 
     out_d, out_i = find_winners_pallas_padded(
-        sig_p, w_p, bias, block_m=block_m, block_c=block_c,
+        signals, w, act, block_m=block_m, block_c=block_c,
         interpret=interpret)
     out_d, out_i = out_d[:m], out_i[:m]
     # degenerate case (<2 active units): duplicate the winner into the

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gson import topology as topo
 from repro.core.gson.multi import (multi_signal_step_impl, winner_lock)
