@@ -1,8 +1,8 @@
 """Dispatch-overhead benchmark: fused superstep vs host-dispatched loop.
 
 The paper's multi-signal variant wins by keeping the accelerator busy,
-but the host loop in ``engine.py`` pays per-iteration dispatch + sync
-(two ``block_until_ready`` fences, an ``int(n_active)`` device read, a
+but the host loop pays per-iteration dispatch + sync (two
+``block_until_ready`` fences, an ``int(n_active)`` device read, a
 separate sampler dispatch). At small network sizes that overhead — not
 compute — dominates step time. The fused superstep amortizes ONE device
 call over ``length`` iterations.
@@ -10,45 +10,46 @@ call over ``length`` iterations.
 Both variants run the identical workload here: same model, same fixed m
 (so the fused signal buffer has zero masked rows and per-iteration
 compute is identical), same convergence-check cadence, same seed. The
-difference is purely where the loop lives.
+difference is purely where the loop lives — expressed as two
+``repro.gson.RunSpec``s differing only in variant + typed config.
 """
 from __future__ import annotations
 
 import jax
 
 from benchmarks.common import emit
-from repro.core.gson.engine import EngineConfig, GSONEngine
-from repro.core.gson.sampling import make_sampler
+from repro import gson
 from repro.core.gson.state import GSONParams
-from repro.core.gson.superstep import SuperstepConfig
 
 COLS = ["units", "m", "iters", "t_iter_multi_ms", "t_iter_fused_ms",
         "speedup", "signals_multi", "signals_fused"]
 
 
-def _engine(variant: str, m: int, capacity: int, iters: int,
-            superstep_len: int) -> GSONEngine:
+def _spec(variant: str, m: int, capacity: int, iters: int,
+          superstep_len: int) -> gson.RunSpec:
     p = GSONParams(model="soam", insertion_threshold=0.2, age_max=64.0,
                    eps_b=0.1, eps_n=0.01, stuck_window=60)
-    cfg = EngineConfig(
-        params=p, capacity=capacity, max_deg=16, variant=variant,
-        fixed_m=m,
-        superstep=SuperstepConfig(length=superstep_len, max_parallel=m),
-        check_every=24, refresh_every=2, max_iterations=iters)
-    return GSONEngine(cfg, make_sampler("sphere"))
+    if variant == "multi-fused":
+        vcfg = gson.FusedConfig(
+            superstep=gson.SuperstepConfig(length=superstep_len,
+                                           max_parallel=m),
+            fixed_m=m, refresh_every=2)
+    else:
+        vcfg = gson.MultiConfig(fixed_m=m, refresh_every=2)
+    return gson.RunSpec(variant=variant, model=p, sampler="sphere",
+                        variant_config=vcfg, capacity=capacity,
+                        max_deg=16, check_every=24, max_iterations=iters)
 
 
 def bench_pair(m: int, capacity: int = 512, iters: int = 96,
                superstep_len: int = 32, seed: int = 0) -> dict:
     out = {}
     for variant in ("multi", "multi-fused"):
+        spec = _spec(variant, m, capacity, iters, superstep_len)
         # first run compiles (jit caches are global, keyed on statics),
         # second run measures steady-state wall time
-        _engine(variant, m, capacity, iters, superstep_len).run(
-            jax.random.key(seed))
-        state, stats = _engine(variant, m, capacity, iters,
-                               superstep_len).run(jax.random.key(seed))
-        out[variant] = (state, stats)
+        gson.run(spec, jax.random.key(seed))
+        out[variant] = gson.run(spec, jax.random.key(seed))
     s_multi, s_fused = out["multi"][1], out["multi-fused"][1]
     t_multi = s_multi.time_total / max(s_multi.iterations, 1)
     t_fused = s_fused.time_total / max(s_fused.iterations, 1)

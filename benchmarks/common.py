@@ -1,4 +1,10 @@
-"""Shared benchmark plumbing: engine runners + CSV/markdown emit.
+"""Shared benchmark plumbing: spec builders + runners + CSV/markdown emit.
+
+Benchmarks go through the composable ``repro.gson`` API: a run is a
+``RunSpec`` (variant / model / sampler / backend names resolved through
+the registries) executed with ``gson.run``. ``variant_config_for``
+builds the typed per-variant config from the flat keyword set the
+benchmark tables share.
 
 CPU-scale note: this container is one CPU core; the paper's hardware was
 a CPU + GT440 GPU. Benchmarks therefore run REDUCED workloads (smaller
@@ -17,9 +23,8 @@ import time
 import jax
 import numpy as np
 
+from repro import gson
 from repro.core.gson import metrics
-from repro.core.gson.engine import EngineConfig, GSONEngine
-from repro.core.gson.sampling import make_sampler
 from repro.core.gson.state import GSONParams
 
 OUT_DIR = os.environ.get("BENCH_OUT", ".runs/bench")
@@ -34,28 +39,51 @@ SURFACE_THRESHOLDS = {
 }
 
 
-def engine_for(surface: str, variant: str, *, capacity=768,
-               max_iterations=1200, age_max=64.0, fixed_m=None,
-               max_parallel=8192, find_winners=None) -> GSONEngine:
+def variant_config_for(variant: str, *, fixed_m=None, chunk=256,
+                       refresh_every=2, superstep_len=64,
+                       max_parallel_buf=None):
+    """Typed per-variant config from the benchmarks' shared knob set.
+
+    Unknown (newly registered) variants return ``None`` — their
+    defaults apply, which is what lets the registry-driven variant
+    matrix run strategies this module has never heard of.
+    """
+    if variant == "multi":
+        return gson.MultiConfig(fixed_m=fixed_m,
+                                refresh_every=refresh_every)
+    if variant == "multi-fused":
+        return gson.FusedConfig(
+            superstep=gson.SuperstepConfig(length=superstep_len,
+                                           max_parallel=max_parallel_buf),
+            fixed_m=fixed_m, refresh_every=refresh_every)
+    if variant == "single":
+        return gson.SingleConfig(chunk=chunk)
+    if variant == "indexed":
+        return gson.IndexedConfig(chunk=chunk)
+    return None
+
+
+def spec_for(surface: str, variant: str, *, capacity=768,
+             max_iterations=1200, age_max=64.0, fixed_m=None,
+             max_parallel=8192, backend=None) -> gson.RunSpec:
     # eps/age/window tuned for convergence on this container's budget;
     # the stable-edge crystallization (H-soam-2) does the heavy lifting
     p = GSONParams(model="soam",
                    insertion_threshold=SURFACE_THRESHOLDS[surface],
                    age_max=age_max, eps_b=0.1, eps_n=0.01,
                    stuck_window=60, max_parallel=max_parallel)
-    cfg = EngineConfig(
-        params=p, capacity=capacity, max_deg=16, variant=variant,
-        fixed_m=fixed_m, chunk=256, check_every=25, refresh_every=2,
+    return gson.RunSpec(
+        variant=variant, model=p, sampler=surface, backend=backend,
+        variant_config=variant_config_for(variant, fixed_m=fixed_m,
+                                          max_parallel_buf=fixed_m),
+        capacity=capacity, max_deg=16, check_every=25,
         max_iterations=max_iterations)
-    bbox = ((-3.0,) * 3, (3.0,) * 3)
-    return GSONEngine(cfg, make_sampler(surface), bbox=bbox,
-                      find_winners=find_winners)
 
 
 def run_one(surface: str, variant: str, seed=42, **kw) -> dict:
-    eng = engine_for(surface, variant, **kw)
+    spec = spec_for(surface, variant, **kw)
     t0 = time.time()
-    state, stats = eng.run(jax.random.key(seed))
+    state, stats = gson.run(spec, jax.random.key(seed))
     row = stats.row()
     v, e, f, chi = metrics.euler_characteristic(state)
     row.update(surface=surface, variant=variant,

@@ -23,7 +23,7 @@ def main(argv=None):
     ap.add_argument("--budget", default="quick", choices=("quick", "full"))
     ap.add_argument("--only", default=None,
                     help="comma list: convergence,phase,per_signal,"
-                         "update,superstep,roofline")
+                         "update,superstep,roofline,variants")
     ap.add_argument("--out", default=BENCH_JSON,
                     help="aggregate JSON path (default: repo root)")
     args = ap.parse_args(argv)
@@ -48,6 +48,11 @@ def main(argv=None):
     if want("superstep"):
         from benchmarks import bench_superstep
         results["superstep"] = bench_superstep.run()
+    if want("variants"):
+        # enumerated from repro.gson.VARIANTS: newly registered variants
+        # appear in BENCH_gson.json without touching the benchmarks
+        from benchmarks import variant_matrix
+        results["variant_matrix"] = variant_matrix.run(budget=args.budget)
     if want("convergence"):
         from benchmarks import table_convergence
         results["convergence"] = table_convergence.run(budget=args.budget)

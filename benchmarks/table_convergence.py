@@ -21,14 +21,11 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
-from benchmarks.common import SURFACE_THRESHOLDS, emit, run_one
-from repro.core.gson import metrics
-from repro.core.gson.engine import EngineConfig, GSONEngine
-from repro.core.gson.sampling import make_sampler
+from benchmarks.common import (SURFACE_THRESHOLDS, emit, run_one,
+                               variant_config_for)
+from repro import gson
 from repro.core.gson.state import GSONParams
-from repro.kernels.find_winners.ops import make_pallas_find_winners
 
 COLS_A = ["surface", "variant", "iterations", "signals", "discarded",
           "effective_signals", "units", "connections", "avg_degree",
@@ -45,8 +42,7 @@ def run_soam(surfaces, budget) -> list[dict]:
     for surface in surfaces:
         r = run_one(surface, "multi", **caps)
         st_rows = [("multi", r)]
-        rk = run_one(surface, "multi",
-                     find_winners=make_pallas_find_winners(interpret=True),
+        rk = run_one(surface, "multi", backend="pallas",
                      **dict(caps, max_iterations=40))
         rk["variant"] = "kernel(interp,40it)"
         st_rows.append(("kernel", rk))
@@ -55,17 +51,17 @@ def run_soam(surfaces, budget) -> list[dict]:
     return rows
 
 
-def _gwr_engine(surface, variant, qe_threshold, max_iterations):
+def _gwr_spec(surface, variant, qe_threshold, max_iterations):
     # finer insertion threshold than the SOAM runs so the QE target is
     # reachable by unit growth alone (GWR has no topological criterion)
     p = GSONParams(model="gwr",
                    insertion_threshold=0.7 * SURFACE_THRESHOLDS[surface],
                    age_max=64.0, eps_b=0.1, eps_n=0.01)
-    cfg = EngineConfig(params=p, capacity=512, max_deg=16,
-                       variant=variant, chunk=128, check_every=5,
-                       qe_threshold=qe_threshold,
-                       max_iterations=max_iterations, n_probe=1024)
-    return GSONEngine(cfg, make_sampler(surface))
+    vcfg = variant_config_for(variant, chunk=128)
+    return gson.RunSpec(variant=variant, model=p, sampler=surface,
+                        variant_config=vcfg, capacity=512, max_deg=16,
+                        check_every=5, qe_threshold=qe_threshold,
+                        max_iterations=max_iterations, n_probe=1024)
 
 
 def run_signal_ratio(surfaces, budget) -> list[dict]:
@@ -80,10 +76,10 @@ def run_signal_ratio(surfaces, budget) -> list[dict]:
         for variant, max_it in (("single", iters[0]),
                                 ("indexed", iters[0]),
                                 ("multi", iters[1])):
-            eng = _gwr_engine(surface, variant, qe_target[surface],
-                              max_it)
+            spec = _gwr_spec(surface, variant, qe_target[surface],
+                             max_it)
             t0 = time.time()
-            state, stats = eng.run(jax.random.key(7))
+            state, stats = gson.run(spec, jax.random.key(7))
             row = dict(surface=surface, variant=variant,
                        iterations=stats.iterations,
                        effective_signals=stats.signals - stats.discarded,

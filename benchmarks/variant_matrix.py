@@ -1,0 +1,40 @@
+"""Registry-driven variant matrix: every registered variant, one row.
+
+The variant list is enumerated from ``repro.gson.VARIANTS`` — NOT
+hard-coded — so a newly registered strategy automatically gets a row in
+``BENCH_gson.json`` (the perf trajectory future PRs regress against)
+the next time ``python -m benchmarks.run`` executes. Each row is a
+short SOAM sphere run with that variant's default typed config, sized
+for the single-core container.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_one
+from repro import gson
+
+COLS = ["variant", "iterations", "signals", "effective_signals", "units",
+        "connections", "converged", "qe", "wall"]
+
+# per-variant iteration budgets: the sequential scans process chunk
+# signals per iteration, so they need (and can afford) far fewer
+_BUDGET = {"quick": {"default": 200, "single": 24, "indexed": 24},
+           "full": {"default": 600, "single": 80, "indexed": 80}}
+
+
+def run(surface: str = "sphere", budget: str = "quick") -> list[dict]:
+    budgets = _BUDGET[budget]
+    rows = []
+    for variant in gson.VARIANTS.names():
+        iters = budgets.get(variant, budgets["default"])
+        rows.append(run_one(surface, variant, capacity=256,
+                            max_iterations=iters))
+    emit("variant_matrix", rows, COLS)
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

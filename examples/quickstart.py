@@ -7,21 +7,22 @@ shows the LM substrate's one-liner train step on a toy config.
 """
 import jax
 
-from repro.core.gson import (EngineConfig, GSONEngine, GSONParams)
+from repro import gson
 from repro.core.gson import metrics
-from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams
 
 # --- 1. the paper: multi-signal growing self-organizing network --------
-engine = GSONEngine(
-    EngineConfig(
-        params=GSONParams(model="soam", insertion_threshold=0.35,
-                          age_max=64.0, eps_b=0.1, eps_n=0.01,
-                          stuck_window=60),
-        capacity=512, max_deg=16, variant="multi",
-        check_every=25, refresh_every=2, max_iterations=400),
-    make_sampler("sphere"))
+# variant / model / sampler are names resolved through gson's registries
+spec = gson.RunSpec(
+    variant="multi",
+    model=GSONParams(model="soam", insertion_threshold=0.35,
+                     age_max=64.0, eps_b=0.1, eps_n=0.01,
+                     stuck_window=60),
+    sampler="sphere",
+    variant_config=gson.MultiConfig(refresh_every=2),
+    capacity=512, max_deg=16, check_every=25, max_iterations=400)
 
-state, stats = engine.run(jax.random.key(0), verbose=True)
+state, stats = gson.run(spec, jax.random.key(0), verbose=True)
 print(f"\nsphere reconstruction: units={stats.units} "
       f"edges={stats.connections} signals={stats.signals} "
       f"(discarded {stats.discarded}) converged={stats.converged}")

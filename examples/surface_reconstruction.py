@@ -3,12 +3,21 @@
   PYTHONPATH=src python examples/surface_reconstruction.py \
       --surface eight --variant multi --iters 1500 --out eight.obj
 
-Runs the chosen implementation (single / indexed / multi / multi-fused /
-kernel) to convergence, validates the reconstructed topology (Euler
-characteristic vs the surface's known genus), and exports the
-triangulation as a Wavefront .obj you can open in any mesh viewer.
-``multi-fused`` runs the whole iterate-sample-converge loop on device
-(see src/repro/core/gson/superstep.py and EXPERIMENTS.md §Perf).
+Built on the composable ``repro.gson`` API: the run is declared as a
+``RunSpec`` whose variant / model / sampler / backend are names resolved
+through the registries (``--variant`` choices are enumerated from
+``gson.VARIANTS`` at startup, so a newly registered variant appears here
+automatically), and driven by a streaming ``gson.Session``:
+
+  * progress rows print as convergence checks complete (``stream``);
+  * ``--checkpoint-dir`` snapshots the network every
+    ``--checkpoint-every`` iterations through ``repro.checkpoint``;
+    re-running with ``--resume`` continues from the newest snapshot —
+    the same signal stream, as if the run had never stopped.
+
+After the run the reconstructed topology is validated (Euler
+characteristic vs the surface's known genus) and optionally exported as
+a Wavefront .obj.
 """
 from __future__ import annotations
 
@@ -17,12 +26,8 @@ import argparse
 import jax
 import numpy as np
 
+from repro import gson
 from repro.core.gson import metrics
-from repro.core.gson.engine import EngineConfig, GSONEngine
-from repro.core.gson.sampling import SURFACES, make_sampler
-from repro.core.gson.state import GSONParams
-from repro.core.gson.superstep import SuperstepConfig
-from repro.kernels.find_winners.ops import make_pallas_find_winners
 
 GENUS = {"sphere": 0, "torus": 1, "eight": 2, "trefoil": 1}
 THRESH = {"sphere": 0.35, "torus": 0.25, "eight": 0.22, "trefoil": 0.12}
@@ -53,43 +58,76 @@ def export_obj(state, path: str):
     return len(ids), len(faces)
 
 
+def build_spec(args) -> gson.RunSpec:
+    variant, backend = args.variant, "reference"
+    if variant == "kernel":     # legacy alias: multi + Pallas backend
+        variant, backend = "multi", "pallas"
+    vcfg = None
+    if variant == "multi-fused":
+        vcfg = gson.FusedConfig(
+            superstep=gson.SuperstepConfig(length=args.superstep),
+            refresh_every=2)
+    elif variant == "multi":
+        vcfg = gson.MultiConfig(refresh_every=2)
+    return gson.RunSpec(
+        variant=variant,
+        model=gson.GSONParams(model="soam",
+                              insertion_threshold=THRESH.get(
+                                  args.surface, 0.25),
+                              age_max=64.0, eps_b=0.1, eps_n=0.01,
+                              stuck_window=60),
+        sampler=args.surface,
+        backend=backend,
+        variant_config=vcfg,
+        capacity=args.capacity, max_deg=16,
+        check_every=25, max_iterations=args.iters)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--surface", default="sphere", choices=SURFACES)
+    ap.add_argument("--surface", default="sphere",
+                    choices=sorted(gson.SAMPLERS.names()))
     ap.add_argument("--variant", default="multi",
-                    choices=("single", "indexed", "multi", "multi-fused",
-                             "kernel"))
+                    choices=sorted(gson.VARIANTS.names()) + ["kernel"])
     ap.add_argument("--superstep", type=int, default=64,
                     help="iterations per device call (multi-fused)")
     ap.add_argument("--iters", type=int, default=800)
     ap.add_argument("--capacity", type=int, default=768)
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--out", default=None, help="export .obj path")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot directory (enables --resume)")
+    ap.add_argument("--checkpoint-every", type=int, default=200,
+                    help="iterations between snapshots")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest snapshot")
     args = ap.parse_args(argv)
 
-    fw = None
-    variant = args.variant
-    if variant == "kernel":
-        fw = make_pallas_find_winners(interpret=True)
-        variant = "multi"
-
-    cfg = EngineConfig(
-        params=GSONParams(model="soam",
-                          insertion_threshold=THRESH[args.surface],
-                          age_max=64.0, eps_b=0.1, eps_n=0.01,
-                          stuck_window=60),
-        capacity=args.capacity, max_deg=16, variant=variant,
-        superstep=SuperstepConfig(length=args.superstep),
-        check_every=25, refresh_every=2, max_iterations=args.iters)
-    eng = GSONEngine(cfg, make_sampler(args.surface), find_winners=fw)
-    state, stats = eng.run(jax.random.key(args.seed), verbose=True)
+    spec = build_spec(args)
+    if args.resume:
+        if not args.checkpoint_dir:
+            ap.error("--resume requires --checkpoint-dir")
+        sess = gson.Session.restore(spec, args.checkpoint_dir,
+                                    verbose=True,
+                                    checkpoint_every=args.checkpoint_every)
+        print(f"resumed from iteration {sess.iteration}")
+    else:
+        sess = gson.Session(
+            spec, jax.random.key(args.seed), verbose=True,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=(args.checkpoint_every
+                              if args.checkpoint_dir else 0))
+    sess.run()
+    if args.checkpoint_dir:
+        sess.checkpoint()
+    state, stats = sess.result()
 
     v, e, f, chi = metrics.euler_characteristic(state)
-    expect_chi = 2 - 2 * GENUS[args.surface]
+    expect_chi = 2 - 2 * GENUS.get(args.surface, 0)
     print(f"\n{args.surface} via {args.variant}: converged="
           f"{stats.converged} units={stats.units} edges={e} faces={f}")
     print(f"Euler characteristic {chi} (target {expect_chi}, genus "
-          f"{GENUS[args.surface]})  signals={stats.signals} "
+          f"{GENUS.get(args.surface, 0)})  signals={stats.signals} "
           f"discarded={stats.discarded}")
     print(f"phase times: sample {stats.time_sample:.1f}s  "
           f"step {stats.time_step:.1f}s  "

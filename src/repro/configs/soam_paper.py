@@ -3,6 +3,10 @@
 Multi-signal variant, m capped at 8192 (paper Sec. 3.1), insertion
 threshold per-surface; production deployment is data-partitioned over
 (pod, data) with the unit pool replicated (see core/gson/distributed.py).
+
+``paper_spec()`` expresses the same experiment as a composable
+``repro.gson.RunSpec`` (variant/model/sampler resolved through the
+registries) — the entry point the dry-run and serving layers consume.
 """
 from repro.core.gson.state import GSONParams
 
@@ -19,3 +23,22 @@ config = GSONParams(
 CAPACITY = 65536 // 2
 MAX_DEG = 16
 DIM = 3
+
+
+def paper_spec(surface: str = "sphere", variant: str = "multi",
+               capacity: int = CAPACITY):
+    """The paper's experiment as a ``repro.gson`` spec.
+
+    ``variant`` is any name registered in ``repro.gson.VARIANTS``
+    ("multi" is the paper's contribution; "single"/"indexed" its
+    baselines; "multi-fused" this repo's beyond-paper schedule).
+    """
+    from repro import gson
+    return gson.RunSpec(
+        variant=variant,
+        model=config,
+        sampler=surface,
+        capacity=capacity,
+        dim=DIM,
+        max_deg=MAX_DEG,
+    )

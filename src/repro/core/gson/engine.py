@@ -1,71 +1,51 @@
-"""Host-side driver for growing self-organizing network runs.
+"""Legacy engine entry point — now a thin shim over :mod:`repro.gson`.
 
-Implements the paper's experimental protocol:
-  * multi-signal runs use m = smallest power of two > current unit count,
-    capped at ``params.max_parallel`` (8192 in the paper) — bucketing m
-    keeps the number of distinct jit signatures <= log2(cap);
-  * ``multi-fused`` executes the same schedule entirely on device: the
-    fused superstep (see ``superstep.py``) runs ``superstep.length``
-    iterations — sampling, masked m-schedule, topology refresh and the
-    convergence predicate included — per device call, eliminating the
-    per-iteration dispatch + sync overhead of the host loop;
-  * single-signal runs scan signals one at a time in chunks;
-  * SOAM terminates on the topology criterion (all units disk/patch),
-    GNG/GWR on a quantization-error threshold against probe signals;
-  * per-phase wall times (Sample / Find Winners+Update / Convergence) and
-    convergence statistics are recorded for the benchmark tables. The
-    fused variant cannot split phases (that is the point) — its whole
-    superstep time is accounted under ``time_step``.
+The monolithic driver that used to live here (host loop + fused loop +
+an 18-field config dispatching on a variant string) was replaced by the
+composable public API:
+
+  * variant strategies + typed per-variant configs: ``repro.gson.variants``
+  * registries (variants / models / samplers / backends): ``repro.gson.registry``
+  * the streaming, resumable run loop: ``repro.gson.session``
+
+``GSONEngine(EngineConfig(variant="multi"), sampler).run(key)`` still
+works and produces the same results as ``repro.gson.run(spec)`` — the
+parity is pinned by ``tests/test_gson_api.py``. New code should build a
+``repro.gson.RunSpec`` instead; this shim exists so pre-redesign
+callers and scripts keep running, and it will not grow new features.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from dataclasses import dataclass, field
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gson import metrics
-from repro.core.gson.index import indexed_single_signal_scan
-from repro.core.gson.multi import (multi_signal_step, refresh_topology,
-                                   soam_converged)
-from repro.core.gson.single import single_signal_scan
-from repro.core.gson.state import GSONParams, init_state
-from repro.core.gson.superstep import (SuperstepConfig, next_pow2,
-                                       run_superstep)
-
-
-@dataclass
-class RunStats:
-    iterations: int = 0
-    signals: int = 0
-    discarded: int = 0
-    units: int = 0
-    connections: int = 0
-    converged: bool = False
-    quantization_error: float = float("nan")
-    time_total: float = 0.0
-    time_sample: float = 0.0
-    time_step: float = 0.0        # Find Winners + Update (fused under jit)
-    time_convergence: float = 0.0
-    history: list = field(default_factory=list)
-
-    def row(self) -> dict:
-        d = self.__dict__.copy()
-        d.pop("history")
-        return d
+from repro.core.gson.state import GSONParams
+from repro.core.gson.superstep import SuperstepConfig
+# Re-exported for backwards compatibility: RunStats now lives with the
+# session (history streaming is its concern), but ``from
+# repro.core.gson.engine import RunStats`` keeps working.
+from repro.gson.session import RunStats, Session  # noqa: F401
+from repro.gson.spec import RunSpec
+from repro.gson.variants import (FusedConfig, IndexedConfig, MultiConfig,
+                                 SingleConfig)
 
 
 @dataclass
 class EngineConfig:
-    params: GSONParams = GSONParams()
+    """Flat legacy config; mapped onto a ``RunSpec`` + typed per-variant
+    config by :meth:`to_spec`. Mutable-instance defaults use
+    ``default_factory`` so config objects are never shared between
+    ``EngineConfig()`` instances."""
+
+    params: GSONParams = field(default_factory=GSONParams)
     capacity: int = 4096
     max_deg: int = 16
     dim: int = 3
-    variant: str = "multi"   # "multi" | "multi-fused" | "single" | "indexed"
-    superstep: SuperstepConfig = SuperstepConfig()  # multi-fused only
+    variant: str = "multi"   # any name in repro.gson.VARIANTS
+    superstep: SuperstepConfig = field(
+        default_factory=SuperstepConfig)  # multi-fused only
     fixed_m: int | None = None    # override the paper's m schedule
     chunk: int = 256              # signals per device call in single/indexed
     check_every: int = 10         # iterations between convergence checks
@@ -80,183 +60,65 @@ class EngineConfig:
     index_rebuild_every: int = 64
     min_m: int = 4
 
+    def variant_config(self, bbox=None):
+        """The typed per-variant config equivalent to this flat one."""
+        if self.variant == "multi":
+            return MultiConfig(fixed_m=self.fixed_m, min_m=self.min_m,
+                               refresh_every=self.refresh_every)
+        if self.variant == "multi-fused":
+            return FusedConfig(superstep=self.superstep,
+                               fixed_m=self.fixed_m, min_m=self.min_m,
+                               refresh_every=self.refresh_every)
+        if self.variant == "single":
+            return SingleConfig(chunk=self.chunk,
+                                refresh_every=self.single_refresh_every)
+        if self.variant == "indexed":
+            kw = {} if bbox is None else {"bbox": bbox}
+            return IndexedConfig(chunk=self.chunk,
+                                 refresh_every=self.single_refresh_every,
+                                 grid_per_axis=self.grid_per_axis,
+                                 per_cell_cap=self.per_cell_cap,
+                                 rebuild_every=self.index_rebuild_every,
+                                 **kw)
+        return None   # custom registered variant: use its defaults
+
+    def to_spec(self, sampler, find_winners=None, bbox=None) -> RunSpec:
+        return RunSpec(
+            variant=self.variant,
+            model=self.params,
+            sampler=sampler,
+            backend=find_winners,
+            variant_config=self.variant_config(bbox),
+            capacity=self.capacity,
+            dim=self.dim,
+            max_deg=self.max_deg,
+            max_iterations=self.max_iterations,
+            max_signals=self.max_signals,
+            check_every=self.check_every,
+            qe_threshold=self.qe_threshold,
+            n_probe=self.n_probe,
+        )
+
 
 class GSONEngine:
-    """Runs one (variant, model, surface) experiment to convergence."""
+    """Deprecated: use ``repro.gson.run`` / ``repro.gson.Session``."""
 
     def __init__(self, config: EngineConfig, sampler, find_winners=None,
                  bbox=((-3.0,) * 3, (3.0,) * 3)):
+        warnings.warn(
+            "GSONEngine is a legacy shim; build a repro.gson.RunSpec and "
+            "use repro.gson.run / repro.gson.Session instead",
+            DeprecationWarning, stacklevel=2)
         self.cfg = config
         self.sampler = sampler
         self.find_winners = find_winners
         self.bbox = (np.asarray(bbox[0], np.float32),
                      np.asarray(bbox[1], np.float32))
+        bbox_t = (tuple(float(x) for x in self.bbox[0]),
+                  tuple(float(x) for x in self.bbox[1]))
+        self.spec = config.to_spec(sampler, find_winners, bbox_t)
 
-    def _m_schedule(self, n_active: int) -> int:
-        cfg = self.cfg
-        if cfg.fixed_m is not None:
-            return cfg.fixed_m
-        return max(cfg.min_m,
-                   min(next_pow2(n_active), cfg.params.max_parallel))
-
-    def _converged(self, state, probes) -> tuple[bool, float, object]:
-        p = self.cfg.params
-        if p.model == "soam":
-            state = refresh_topology(state, p)
-            ok = bool(soam_converged(state))
-            qe = float(metrics.quantization_error(state, probes))
-            return ok, qe, state
-        done, qe = metrics.qe_convergence(state, probes,
-                                          self.cfg.qe_threshold)
-        return bool(done), float(qe), state
-
-    def _resolved_superstep(self) -> SuperstepConfig:
-        """The engine's convergence/refresh knobs are the single source
-        of truth; ``cfg.superstep`` only contributes the fused-loop
-        shape (length, buffer size, early-exit form)."""
-        cfg = self.cfg
-        ss = cfg.superstep.resolve(cfg.capacity, cfg.params)
-        return dataclasses.replace(
-            ss,
-            refresh_every=cfg.refresh_every,
-            check_every=cfg.check_every,
-            qe_threshold=cfg.qe_threshold,
-            min_m=cfg.min_m,
-            fixed_m=cfg.fixed_m if cfg.fixed_m is not None else ss.fixed_m)
-
-    def run(self, rng: jax.Array, verbose: bool = False):
-        cfg, p = self.cfg, self.cfg.params
-        rng, k_init, k_probe, k_seed = jax.random.split(rng, 4)
-        seed_pts = self.sampler(k_seed, 2)
-        state = init_state(
-            k_init, capacity=cfg.capacity, dim=cfg.dim,
-            max_deg=cfg.max_deg, seed_points=seed_pts,
-            init_threshold=p.insertion_threshold)
-        probes = self.sampler(k_probe, cfg.n_probe)
-
-        stats = RunStats()
-        t_start = time.perf_counter()
-        if cfg.variant == "multi-fused":
-            state, it = self._fused_loop(state, rng, probes, stats, verbose)
-        else:
-            state, it = self._host_loop(state, rng, probes, stats, verbose)
-
-        stats.iterations = it
-        stats.signals = int(state.signal_count)
-        stats.discarded = int(state.discarded)
-        stats.units = int(state.n_active)
-        stats.connections = metrics.edge_count(state)
-        stats.time_total = time.perf_counter() - t_start
-        if np.isnan(stats.quantization_error):
-            stats.quantization_error = float(
-                metrics.quantization_error(state, probes))
-        return state, stats
-
-    def _fused_loop(self, state, rng, probes, stats: RunStats,
-                    verbose: bool):
-        """One device call per ``superstep.length`` iterations; the host
-        only reads back scalars (iteration count, convergence flag, QE)
-        between supersteps."""
-        cfg, p = self.cfg, self.cfg.params
-        ss = self._resolved_superstep()
-        it = 0
-        while (it < cfg.max_iterations
-               and int(state.signal_count) < cfg.max_signals):
-            # bound by BOTH remaining budgets: iterations, and signals
-            # (worst case one iteration consumes max_parallel signals) —
-            # overshoot is then at most one iteration's m, like the
-            # host loop
-            sig_left = cfg.max_signals - int(state.signal_count)
-            length = max(1, min(ss.length, cfg.max_iterations - it,
-                                -(-sig_left // ss.max_parallel)))
-            t0 = time.perf_counter()
-            res = run_superstep(
-                state, rng, probes, it,
-                sampler=self.sampler, params=p,
-                cfg=dataclasses.replace(ss, length=length),
-                find_winners=self.find_winners)
-            state, rng = res.state, res.rng
-            state.w.block_until_ready()
-            stats.time_step += time.perf_counter() - t0
-            it += int(res.iterations)
-            qe = float(res.qe)
-            stats.history.append({
-                "iteration": it,
-                "units": int(state.n_active),
-                "signals": int(state.signal_count),
-                "qe": qe,
-            })
-            if verbose:
-                h = stats.history[-1]
-                print(f"  it={h['iteration']:6d} units={h['units']:6d} "
-                      f"signals={h['signals']:9d} qe={h['qe']:.5f}")
-            if bool(res.converged):
-                stats.converged = True
-                stats.quantization_error = qe
-                break
-        return state, it
-
-    def _host_loop(self, state, rng, probes, stats: RunStats,
-                   verbose: bool):
-        cfg, p = self.cfg, self.cfg.params
-        it = 0
-        while (it < cfg.max_iterations
-               and int(state.signal_count) < cfg.max_signals):
-            n_act = int(state.n_active)
-            # ---- Sample ----
-            t0 = time.perf_counter()
-            rng, k_sig = jax.random.split(rng)
-            if cfg.variant == "multi":
-                m = self._m_schedule(n_act)
-            else:
-                m = cfg.chunk
-            signals = self.sampler(k_sig, m)
-            signals.block_until_ready()
-            stats.time_sample += time.perf_counter() - t0
-
-            # ---- Find Winners + Update ----
-            t0 = time.perf_counter()
-            if cfg.variant == "multi":
-                refresh = (p.model == "soam"
-                           and it % cfg.refresh_every == 0)
-                state = multi_signal_step(
-                    state, signals, p, refresh_states=refresh,
-                    find_winners=self.find_winners)
-            elif cfg.variant == "single":
-                state = single_signal_scan(
-                    state, signals, p,
-                    refresh_every=cfg.single_refresh_every,
-                    find_winners=self.find_winners)
-            elif cfg.variant == "indexed":
-                state = indexed_single_signal_scan(
-                    state, signals, p, self.bbox[0], self.bbox[1],
-                    grid_per_axis=cfg.grid_per_axis,
-                    per_cell_cap=cfg.per_cell_cap,
-                    rebuild_every=cfg.index_rebuild_every,
-                    refresh_every=cfg.single_refresh_every)
-            else:
-                raise ValueError(cfg.variant)
-            state.w.block_until_ready()
-            stats.time_step += time.perf_counter() - t0
-
-            it += 1
-            # ---- Convergence check ----
-            if it % cfg.check_every == 0:
-                t0 = time.perf_counter()
-                done, qe, state = self._converged(state, probes)
-                stats.time_convergence += time.perf_counter() - t0
-                stats.history.append({
-                    "iteration": it,
-                    "units": int(state.n_active),
-                    "signals": int(state.signal_count),
-                    "qe": qe,
-                })
-                if verbose:
-                    h = stats.history[-1]
-                    print(f"  it={h['iteration']:6d} units={h['units']:6d} "
-                          f"signals={h['signals']:9d} qe={h['qe']:.5f}")
-                if done:
-                    stats.converged = True
-                    stats.quantization_error = qe
-                    break
-        return state, it
+    def run(self, rng, verbose: bool = False):
+        session = Session(self.spec, rng, verbose=verbose)
+        session.run()
+        return session.result()

@@ -1,11 +1,14 @@
 """Fused on-device superstep: S multi-signal iterations per device call.
 
-The host driver in ``engine.py`` re-crosses the host<->device boundary
-every iteration: a ``block_until_ready`` after sampling, another after
-the step, and a Python-side ``int(state.n_active)`` read to pick the
-paper's m-schedule. For the small networks where the multi-signal
-variant wins biggest, dispatch + sync latency dominates step time, so
-the whole iterate-sample-converge loop moves on device here:
+The host-dispatched variants (``repro.gson.variants._HostVariant``)
+re-cross the host<->device boundary every iteration: a
+``block_until_ready`` after sampling, another after the step, and a
+Python-side ``int(state.n_active)`` read to pick the paper's
+m-schedule. For the small networks where the multi-signal variant wins
+biggest, dispatch + sync latency dominates step time, so the whole
+iterate-sample-converge loop moves on device here — this module is the
+kernel the ``multi-fused`` strategy (``FusedVariant``) drives through
+the ``repro.gson`` session API:
 
   * sampling happens inside the loop body (the samplers in
     ``sampling.py`` are pure JAX), with the PRNG key threaded through

@@ -17,6 +17,21 @@ import jax.numpy as jnp
 from repro.core.gson import sampling
 
 
+@dataclass(frozen=True)
+class NoisySampler:
+    """Hashable ``(rng, n) -> points`` sampler with additive observation
+    noise — hashes by (surface, noise), so it is a stable jit key for
+    the fused superstep just like the clean ``SurfaceSampler``."""
+
+    base: sampling.SurfaceSampler
+    noise: float
+
+    def __call__(self, rng: jax.Array, n: int) -> jax.Array:
+        k_pts, k_noise = jax.random.split(rng)
+        pts = self.base(k_pts, n)
+        return pts + self.noise * jax.random.normal(k_noise, pts.shape)
+
+
 @dataclass
 class PointCloudStream:
     surface: str
@@ -34,6 +49,13 @@ class PointCloudStream:
             pts = pts + self.noise * jax.random.normal(sub, pts.shape)
         return pts
 
-    # engine-compatible sampler(rng, n) signature
     def as_sampler(self):
+        """Engine-compatible ``(rng, n)`` sampler, noise included.
+
+        The stream's ``seed`` does not carry over: in the session API
+        the PRNG is owned (and threaded) by the session, so determinism
+        comes from the session seed, not the stream's.
+        """
+        if self.noise > 0.0:
+            return NoisySampler(self._sampler, self.noise)
         return self._sampler

@@ -1,0 +1,57 @@
+"""repro.gson — the composable public API for growing self-organizing
+network experiments.
+
+Assemble a run from names (or objects) along four registered axes, then
+drive it as a streaming, resumable session:
+
+    from repro import gson
+
+    spec = gson.RunSpec(variant="multi-fused", model="soam",
+                        sampler="eight", backend="reference",
+                        variant_config=gson.FusedConfig(
+                            superstep=gson.SuperstepConfig(length=64)),
+                        capacity=768, max_iterations=1500)
+
+    state, stats = gson.run(spec, seed=42)            # one-shot
+
+    sess = gson.Session(spec, seed=42,                # streaming
+                        checkpoint_dir="ckpt/eight")
+    for row in sess.stream(budget=500):               # pause at 500 iters
+        print(row["iteration"], row["qe"])
+    sess.checkpoint()
+    sess.resume()                                     # ... to convergence
+    state, stats = sess.result()
+
+    sess = gson.Session.restore(spec, "ckpt/eight")   # after a crash
+
+Registries: ``VARIANTS`` (single / indexed / multi / multi-fused),
+``MODELS`` (gng / gwr / soam), ``SAMPLERS`` (benchmark surfaces; any
+``repro.data.pointclouds`` stream or ``(rng, n) -> points`` callable is
+accepted directly), ``BACKENDS`` (reference / pallas). Registering a new
+entry makes it visible everywhere a registry is enumerated — e.g.
+``benchmarks/run.py``'s variant matrix.
+
+The legacy ``repro.core.gson.engine.GSONEngine`` remains as a thin
+deprecation shim over this package.
+"""
+from repro.core.gson.state import GSONParams, NetworkState
+from repro.core.gson.superstep import SuperstepConfig
+from repro.gson.registry import (BACKENDS, MODELS, SAMPLERS, VARIANTS,
+                                 ModelDef, Registry, resolve_backend,
+                                 resolve_model, resolve_sampler)
+from repro.gson.session import RunStats, Session, run
+from repro.gson.spec import RunSpec, resolve, resolve_variant
+from repro.gson.variants import (DEFAULT_BBOX, FusedConfig, IndexedConfig,
+                                 MultiConfig, Runtime, SingleConfig,
+                                 StepResult, VariantStrategy,
+                                 check_convergence)
+
+__all__ = [
+    "BACKENDS", "MODELS", "SAMPLERS", "VARIANTS",
+    "DEFAULT_BBOX", "FusedConfig", "GSONParams", "IndexedConfig",
+    "ModelDef", "MultiConfig", "NetworkState", "Registry", "RunSpec",
+    "RunStats", "Runtime", "Session", "SingleConfig", "StepResult",
+    "SuperstepConfig", "VariantStrategy", "check_convergence",
+    "resolve", "resolve_backend", "resolve_model", "resolve_sampler",
+    "resolve_variant", "run",
+]

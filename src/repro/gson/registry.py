@@ -1,0 +1,182 @@
+"""Named registries for the composable GSON run API.
+
+Four orthogonal axes, mirroring the paper's experimental matrix:
+
+  VARIANTS  — how the iterate-sample-converge loop is parallelized
+              (the paper's contribution axis: single / indexed / multi /
+              multi-fused)
+  MODELS    — the growing-network rule set (GNG / GWR / SOAM)
+  SAMPLERS  — the signal distribution P(xi) (benchmark surfaces +
+              point-cloud streams from ``repro.data.pointclouds``)
+  BACKENDS  — the Find Winners implementation (pure-jnp reference,
+              Pallas MXU kernel)
+
+Every axis accepts either a registered name or a concrete object, so
+``RunSpec(variant="multi", sampler="sphere")`` and
+``RunSpec(variant=MultiVariant(), sampler=my_sampler)`` resolve to the
+same run. Registries raise on duplicates and list their options on a
+miss; registering a new entry makes it visible to every enumerating
+caller (``benchmarks/run.py`` builds its variant matrix from
+``VARIANTS.names()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Generic, Iterator, TypeVar
+
+from repro.core.gson.multi import find_winners_reference
+from repro.core.gson.sampling import SURFACES, make_sampler
+from repro.core.gson.state import GSONParams
+
+T = TypeVar("T")
+
+
+class Registry(Generic[T]):
+    """A write-once name -> object table with helpful misses."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, T] = {}
+
+    def register(self, name: str, obj: T | None = None):
+        """``register(name, obj)`` directly, or ``@register(name)`` as a
+        decorator. Duplicate names are an error (use a new name; the
+        registries are flat namespaces shared by benchmarks and CLIs)."""
+        if obj is None:
+            return functools.partial(self.register, name)
+        if name in self._entries:
+            raise ValueError(
+                f"duplicate {self.kind} registration {name!r}")
+        self._entries[name] = obj
+        return obj
+
+    def get(self, name: str) -> T:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{', '.join(self.names())}") from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._entries))
+
+    def items(self):
+        return tuple(sorted(self._entries.items()))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# Models: the growing-network rule sets.
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A registered rule set: published defaults + how runs terminate.
+
+    ``convergence`` drives the host-side predicate
+    (``variants.check_convergence``): "topology" = SOAM's all-units-
+    disk/patch criterion, "qe" = quantization-error threshold. The
+    fused superstep's on-device check follows the compiled rule set
+    (``params.model``), which agrees for all built-in models.
+    """
+
+    name: str
+    params: GSONParams
+    convergence: str        # "topology" (SOAM) | "qe" (GNG/GWR)
+    description: str = ""
+
+
+MODELS: Registry[ModelDef] = Registry("model")
+
+MODELS.register("gng", ModelDef(
+    "gng", GSONParams(model="gng"), "qe",
+    "Growing Neural Gas (Fritzke 95): error-driven periodic insertion"))
+MODELS.register("gwr", ModelDef(
+    "gwr", GSONParams(model="gwr"), "qe",
+    "Grow When Required (Marsland 02): threshold + habituation insertion"))
+MODELS.register("soam", ModelDef(
+    "soam", GSONParams(model="soam"), "topology",
+    "Self-Organizing Adaptive Map (Piastra 12): terminates when every "
+    "unit neighborhood is a disk/patch"))
+
+
+def resolve_model(model: str | GSONParams) -> GSONParams:
+    """Name -> published defaults; a GSONParams instance passes through
+    (validated against the registry so typos in ``model=`` fail early)."""
+    if isinstance(model, GSONParams):
+        MODELS.get(model.model)
+        return model
+    return MODELS.get(model).params
+
+
+# ---------------------------------------------------------------------------
+# Samplers: P(xi). Entries are zero-arg factories returning an engine
+# sampler ``f(rng, n) -> (n, dim) f32``; surface samplers hash by name so
+# they are stable jit keys for the fused superstep.
+
+SAMPLERS: Registry[Callable[[], Any]] = Registry("sampler")
+
+for _surface in SURFACES:
+    SAMPLERS.register(_surface, functools.partial(make_sampler, _surface))
+
+
+def resolve_sampler(sampler: str | Any):
+    """Name, engine sampler, or a ``repro.data.pointclouds`` stream."""
+    if isinstance(sampler, str):
+        return SAMPLERS.get(sampler)()
+    as_sampler = getattr(sampler, "as_sampler", None)
+    if as_sampler is not None:        # PointCloudStream and friends
+        return as_sampler()
+    if not callable(sampler):
+        raise TypeError(
+            f"sampler must be a registered name, a callable (rng, n) -> "
+            f"points, or a point-cloud stream; got {type(sampler)!r}")
+    return sampler
+
+
+# ---------------------------------------------------------------------------
+# Find Winners backends. Entries are zero-arg factories; ``None`` from a
+# factory means "the variant's built-in default search".
+
+BACKENDS: Registry[Callable[[], Any]] = Registry("backend")
+
+BACKENDS.register("reference", lambda: find_winners_reference)
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_backend():
+    # one shared adapter instance: the fused superstep keys its jit cache
+    # on the (identity-hashed) find_winners callable
+    from repro.kernels.find_winners.ops import make_pallas_find_winners
+    return make_pallas_find_winners()
+
+
+BACKENDS.register("pallas", _pallas_backend)
+
+
+def resolve_backend(backend: str | Any | None):
+    if backend is None:
+        return None
+    if isinstance(backend, str):
+        return BACKENDS.get(backend)()
+    if not callable(backend):
+        raise TypeError(
+            f"backend must be a registered name or a FindWinnersFn; got "
+            f"{type(backend)!r}")
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Variants: registered by repro.gson.variants at import time (the
+# strategy classes need this module, so registration lives there).
+
+VARIANTS: Registry[Any] = Registry("variant")

@@ -1,0 +1,81 @@
+"""RunSpec: one declarative description of a GSON experiment.
+
+A spec names (or carries) one entry per registry axis — variant, model,
+sampler, Find Winners backend — plus the pool geometry and run limits
+shared by every variant. ``resolve(spec)`` turns it into the concrete
+strategy + Runtime the session drives; everything downstream (Session,
+GSONEngine shim, serving, benchmarks) goes through this one function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+from repro.core.gson.state import GSONParams
+from repro.gson.registry import (VARIANTS, resolve_backend, resolve_model,
+                                 resolve_sampler)
+from repro.gson.variants import Runtime, VariantStrategy
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """Everything needed to reproduce one run (modulo the PRNG seed).
+
+    Axis fields accept a registered name or a concrete object; the typed
+    per-variant knobs live in ``variant_config`` (``None`` means the
+    variant's defaults).
+    """
+
+    variant: str | Any = "multi"
+    model: str | GSONParams = "soam"
+    sampler: str | Any = "sphere"
+    backend: str | Any | None = "reference"
+    variant_config: Any = None
+
+    # pool geometry
+    capacity: int = 4096
+    dim: int = 3
+    max_deg: int = 16
+
+    # run limits + convergence (shared by all variants)
+    max_iterations: int = 100_000
+    max_signals: int = 50_000_000
+    check_every: int = 10         # iterations between convergence checks
+    qe_threshold: float = 1e-3    # GNG/GWR convergence
+    n_probe: int = 2048
+
+    def replace(self, **kw) -> "RunSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_variant(variant: str | Any) -> VariantStrategy:
+    if isinstance(variant, str):
+        return VARIANTS.get(variant)
+    if isinstance(variant, type):
+        variant = variant()
+    if not isinstance(variant, VariantStrategy):
+        raise TypeError(
+            f"variant must be a registered name or a VariantStrategy "
+            f"(prepare/step/convergence hooks); got {type(variant)!r}")
+    return variant
+
+
+def resolve(spec: RunSpec) -> tuple[VariantStrategy, Runtime]:
+    """Assemble the concrete strategy + runtime context from the spec."""
+    strategy = resolve_variant(spec.variant)
+    vcfg = spec.variant_config
+    if vcfg is None:
+        vcfg = strategy.config_cls()
+    elif not isinstance(vcfg, strategy.config_cls):
+        raise TypeError(
+            f"variant {strategy.name!r} takes a "
+            f"{strategy.config_cls.__name__}, got {type(vcfg).__name__}")
+    rt = Runtime(
+        spec=spec,
+        params=resolve_model(spec.model),
+        vcfg=vcfg,
+        sampler=resolve_sampler(spec.sampler),
+        find_winners=resolve_backend(spec.backend),
+    )
+    return strategy, rt

@@ -1,0 +1,303 @@
+"""Variant strategies: the pluggable parallelization axis.
+
+The paper's contribution is a *variant* of the growing-network loop —
+same rule set, different execution schedule. Each variant is a strategy
+object with three hooks:
+
+  prepare(rt)                  — resolve derived config once per run
+                                 (e.g. the fused superstep's buffer size)
+  step(rt, state, rng, it, n)  — advance up to ``n`` iterations, timing
+                                 the paper's phases; returns a StepResult
+  convergence(rt, state)       — the termination predicate (shared
+                                 default: SOAM topology criterion or
+                                 quantization error)
+
+and a typed config dataclass (``config_cls``) holding only the knobs
+that variant actually reads — no more flat 18-field config mixing the
+single-signal chunk size with the fused superstep length.
+
+Strategies are stateless singletons registered in ``VARIANTS``; per-run
+state lives in the :class:`Runtime` the session owns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.core.gson import metrics
+from repro.core.gson.index import indexed_single_signal_scan
+from repro.core.gson.multi import (multi_signal_step, refresh_topology,
+                                   soam_converged)
+from repro.core.gson.single import single_signal_scan
+from repro.core.gson.state import GSONParams
+from repro.core.gson.superstep import (SuperstepConfig, next_pow2,
+                                       run_superstep)
+from repro.gson.registry import MODELS, VARIANTS
+
+DEFAULT_BBOX = ((-3.0, -3.0, -3.0), (3.0, 3.0, 3.0))
+
+
+# ---------------------------------------------------------------------------
+# Typed per-variant configs (all frozen; nested configs use
+# default_factory so instances are never shared across spec objects).
+
+@dataclass(frozen=True)
+class MultiConfig:
+    """Host-dispatched multi-signal loop (paper Sec. 2.2/2.5)."""
+
+    fixed_m: int | None = None    # override the paper's m-schedule
+    min_m: int = 4                # floor of the m-schedule
+    refresh_every: int = 5        # SOAM topo refresh cadence (iterations)
+
+
+@dataclass(frozen=True)
+class FusedConfig:
+    """On-device fused superstep (S iterations per device call)."""
+
+    superstep: SuperstepConfig = field(default_factory=SuperstepConfig)
+    fixed_m: int | None = None
+    min_m: int = 4
+    refresh_every: int = 5
+
+
+@dataclass(frozen=True)
+class SingleConfig:
+    """Sequential single-signal reference (paper's baseline)."""
+
+    chunk: int = 256              # signals per device call
+    refresh_every: int = 200      # per-signal SOAM refresh cadence
+
+
+@dataclass(frozen=True)
+class IndexedConfig:
+    """Single-signal with the hash-grid Find Winners index (Sec. 3.1)."""
+
+    chunk: int = 256
+    refresh_every: int = 200
+    grid_per_axis: int = 24
+    per_cell_cap: int = 24
+    rebuild_every: int = 64
+    bbox: tuple = DEFAULT_BBOX    # ((min,)*dim, (max,)*dim)
+
+
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Runtime:
+    """Resolved per-run context the session hands to its strategy."""
+
+    spec: Any                     # the RunSpec (kept duck-typed: no cycle)
+    params: GSONParams
+    vcfg: Any                     # the variant's typed config
+    sampler: Any                  # f(rng, n) -> (n, dim) f32, pure JAX
+    find_winners: Any             # FindWinnersFn | None
+    probes: jax.Array | None = None
+    scratch: dict = field(default_factory=dict)   # strategy-owned
+
+    @property
+    def check_every(self) -> int:
+        return self.spec.check_every
+
+    @property
+    def qe_threshold(self) -> float:
+        return self.spec.qe_threshold
+
+
+@dataclass
+class StepResult:
+    """Outcome of one strategy step (1 iteration, or a fused superstep)."""
+
+    state: Any
+    rng: jax.Array
+    iterations: int               # iterations actually executed
+    checked: bool                 # convergence predicate evaluated?
+    done: bool
+    qe: float
+    timings: dict = field(default_factory=dict)   # phase -> seconds
+
+
+@runtime_checkable
+class VariantStrategy(Protocol):
+    name: str
+    config_cls: type
+
+    def prepare(self, rt: Runtime) -> None: ...
+
+    def step(self, rt: Runtime, state, rng, it: int,
+             max_iters: int) -> StepResult: ...
+
+    def convergence(self, rt: Runtime, state) -> tuple[bool, float, Any]: ...
+
+
+def check_convergence(rt: Runtime, state):
+    """Shared termination predicate, selected by the model's registered
+    ``ModelDef.convergence``: "topology" runs SOAM's criterion on a
+    fresh state ladder, "qe" compares quantization error vs the probe
+    set. (The fused superstep's on-device check follows the compiled
+    rule set instead — see ``superstep._convergence_check``.)"""
+    p = rt.params
+    mode = (MODELS.get(p.model).convergence if p.model in MODELS
+            else "qe")
+    if mode == "topology":
+        state = refresh_topology(state, p)
+        ok = bool(soam_converged(state))
+        qe = float(metrics.quantization_error(state, rt.probes))
+        return ok, qe, state
+    done, qe = metrics.qe_convergence(state, rt.probes, rt.qe_threshold)
+    return bool(done), float(qe), state
+
+
+class _HostVariant:
+    """Shared host-dispatched loop body: sample, update, cadenced check.
+
+    Subclasses choose the signal count per iteration (``_m``) and the
+    update call (``_update``)."""
+
+    def prepare(self, rt: Runtime) -> None:
+        pass
+
+    def convergence(self, rt: Runtime, state):
+        return check_convergence(rt, state)
+
+    def _m(self, rt: Runtime, state) -> int:
+        raise NotImplementedError
+
+    def _update(self, rt: Runtime, state, signals, it: int):
+        raise NotImplementedError
+
+    def step(self, rt: Runtime, state, rng, it: int,
+             max_iters: int) -> StepResult:
+        timings = {}
+        t0 = time.perf_counter()
+        rng, k_sig = jax.random.split(rng)
+        signals = rt.sampler(k_sig, self._m(rt, state))
+        signals.block_until_ready()
+        timings["sample"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        state = self._update(rt, state, signals, it)
+        state.w.block_until_ready()
+        timings["step"] = time.perf_counter() - t0
+
+        it += 1
+        checked = it % rt.check_every == 0
+        done, qe = False, float("nan")
+        if checked:
+            t0 = time.perf_counter()
+            done, qe, state = self.convergence(rt, state)
+            timings["convergence"] = time.perf_counter() - t0
+        return StepResult(state, rng, 1, checked, done, qe, timings)
+
+
+class MultiVariant(_HostVariant):
+    name = "multi"
+    config_cls = MultiConfig
+
+    def _m(self, rt: Runtime, state) -> int:
+        cfg = rt.vcfg
+        if cfg.fixed_m is not None:
+            return cfg.fixed_m
+        return max(cfg.min_m, min(next_pow2(int(state.n_active)),
+                                  rt.params.max_parallel))
+
+    def _update(self, rt: Runtime, state, signals, it: int):
+        refresh = (rt.params.model == "soam"
+                   and it % rt.vcfg.refresh_every == 0)
+        return multi_signal_step(state, signals, rt.params,
+                                 refresh_states=refresh,
+                                 find_winners=rt.find_winners)
+
+
+class SingleVariant(_HostVariant):
+    name = "single"
+    config_cls = SingleConfig
+
+    def _m(self, rt: Runtime, state) -> int:
+        return rt.vcfg.chunk
+
+    def _update(self, rt: Runtime, state, signals, it: int):
+        return single_signal_scan(state, signals, rt.params,
+                                  refresh_every=rt.vcfg.refresh_every,
+                                  find_winners=rt.find_winners)
+
+
+class IndexedVariant(_HostVariant):
+    name = "indexed"
+    config_cls = IndexedConfig
+
+    def prepare(self, rt: Runtime) -> None:
+        lo, hi = rt.vcfg.bbox
+        rt.scratch["bbox"] = (np.asarray(lo, np.float32),
+                              np.asarray(hi, np.float32))
+
+    def _m(self, rt: Runtime, state) -> int:
+        return rt.vcfg.chunk
+
+    def _update(self, rt: Runtime, state, signals, it: int):
+        cfg = rt.vcfg
+        lo, hi = rt.scratch["bbox"]
+        return indexed_single_signal_scan(
+            state, signals, rt.params, lo, hi,
+            grid_per_axis=cfg.grid_per_axis,
+            per_cell_cap=cfg.per_cell_cap,
+            rebuild_every=cfg.rebuild_every,
+            refresh_every=cfg.refresh_every)
+
+
+class FusedVariant:
+    """Whole iterate-sample-converge loop on device (superstep.py)."""
+
+    name = "multi-fused"
+    config_cls = FusedConfig
+
+    def prepare(self, rt: Runtime) -> None:
+        # spec-level convergence/refresh knobs are the single source of
+        # truth; cfg.superstep contributes only the fused-loop shape
+        cfg = rt.vcfg
+        ss = cfg.superstep.resolve(rt.spec.capacity, rt.params)
+        rt.scratch["superstep"] = dataclasses.replace(
+            ss,
+            refresh_every=cfg.refresh_every,
+            check_every=rt.check_every,
+            qe_threshold=rt.qe_threshold,
+            min_m=cfg.min_m,
+            fixed_m=cfg.fixed_m if cfg.fixed_m is not None else ss.fixed_m)
+
+    def convergence(self, rt: Runtime, state):
+        return check_convergence(rt, state)
+
+    def step(self, rt: Runtime, state, rng, it: int,
+             max_iters: int) -> StepResult:
+        ss = rt.scratch["superstep"]
+        # bound by BOTH remaining budgets: iterations, and signals (worst
+        # case one iteration consumes max_parallel signals) — overshoot
+        # is at most one iteration's m, like the host loop
+        sig_left = rt.spec.max_signals - int(state.signal_count)
+        length = max(1, min(ss.length, max_iters,
+                            -(-sig_left // ss.max_parallel)))
+        t0 = time.perf_counter()
+        res = run_superstep(
+            state, rng, rt.probes, it,
+            sampler=rt.sampler, params=rt.params,
+            cfg=dataclasses.replace(ss, length=length),
+            find_winners=rt.find_winners)
+        state, rng = res.state, res.rng
+        state.w.block_until_ready()
+        dt = time.perf_counter() - t0
+        # the fused variant cannot split phases (that is the point):
+        # its whole superstep time is accounted under "step"
+        return StepResult(state, rng, int(res.iterations), True,
+                          bool(res.converged), float(res.qe),
+                          {"step": dt})
+
+
+# stateless singletons: one instance per registered name
+VARIANTS.register("single", SingleVariant())
+VARIANTS.register("indexed", IndexedVariant())
+VARIANTS.register("multi", MultiVariant())
+VARIANTS.register("multi-fused", FusedVariant())

@@ -203,9 +203,14 @@ def _operands(op: Op) -> list[str]:
     seg = op.line[i + len(op.opcode) + 1:]
     j = seg.find(")")
     seg = seg[:j] if j >= 0 else seg
-    out = []
+    # modern HLO prints operands with inline types ("f32[128,256]{1,0}
+    # %Arg_0.1") whose dims contain commas — the %-prefixed token is the
+    # only reliable operand marker
+    out = re.findall(r"%([\w.\-]+)", seg)
+    if out:
+        return out
     for piece in seg.split(","):
-        m = re.search(r"%?([\w.\-]+)\s*$", piece.strip())
+        m = re.search(r"([\w.\-]+)\s*$", piece.strip())
         if m:
             out.append(m.group(1))
     return out

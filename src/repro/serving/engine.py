@@ -156,3 +156,79 @@ class ServeEngine:
             max_ticks -= 1
         self._drain()
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# GSON reconstruction serving: many concurrent surface-reconstruction
+# jobs, each a streaming ``repro.gson.Session``, time-sliced round-robin.
+
+
+@dataclass
+class ReconstructionJob:
+    """One queued/running reconstruction request."""
+
+    jid: int
+    spec: "object"                # repro.gson.RunSpec
+    seed: int = 0
+    history: list = field(default_factory=list)   # streamed rows
+    session: "object | None" = None
+    stats: "object | None" = None
+    done: bool = False
+
+
+class ReconstructionServer:
+    """Wave-based serving of growing-network reconstructions.
+
+    The LM engine above batches *tokens*; this serves *experiments*: a
+    fixed pool of ``slots`` concurrent ``repro.gson.Session`` objects,
+    each advanced by ``slice_iters`` iterations per tick (the budgeted
+    ``Session.run``), so many jobs share one device fairly and progress
+    streams back per job while it is still running. Jobs are declared
+    as ``RunSpec``s — any registered variant/model/sampler/backend
+    combination is servable with no server changes.
+    """
+
+    def __init__(self, slots: int = 4, slice_iters: int = 50):
+        self.slots: list[ReconstructionJob | None] = [None] * slots
+        self.slice_iters = slice_iters
+        self.queue: list[ReconstructionJob] = []
+        self.finished: list[ReconstructionJob] = []
+        self.ticks = 0
+        self._next_jid = 0
+
+    def submit(self, spec, seed: int = 0) -> ReconstructionJob:
+        job = ReconstructionJob(self._next_jid, spec, seed)
+        self._next_jid += 1
+        self.queue.append(job)
+        return job
+
+    def _admit(self):
+        from repro.gson import Session
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.queue:
+                continue
+            job = self.queue.pop(0)
+            job.session = Session(job.spec, seed=job.seed,
+                                  on_history=job.history.append)
+            self.slots[i] = job
+
+    def step(self):
+        """One tick: admit queued jobs, give every live job one slice."""
+        self._admit()
+        self.ticks += 1
+        for i, job in enumerate(self.slots):
+            if job is None:
+                continue
+            job.session.run(budget=self.slice_iters)
+            if not job.session.active:
+                _, job.stats = job.session.result()
+                job.done = True
+                self.finished.append(job)
+                self.slots[i] = None
+
+    def run(self, max_ticks: int = 10_000) -> list[ReconstructionJob]:
+        while (self.queue or any(
+                j is not None for j in self.slots)) and max_ticks > 0:
+            self.step()
+            max_ticks -= 1
+        return self.finished

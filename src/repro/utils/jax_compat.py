@@ -1,0 +1,59 @@
+"""Compatibility layer for the pinned container JAX (0.4.x).
+
+The codebase is written against the modern public names ``jax.shard_map``
+and ``jax.set_mesh``; on older JAX these live under
+``jax.experimental.shard_map`` (with ``check_rep``/``auto`` instead of
+``check_vma``/``axis_names``) or do not exist. Importing :mod:`repro`
+installs forward-compatible aliases onto the ``jax`` module so every
+entry point — tests, subprocess workers, benchmarks — sees one API.
+
+No-op on JAX versions that already provide the real names.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _compat_shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                      axis_names=None, check_vma=True):
+    """``jax.shard_map`` signature on top of ``jax.experimental.shard_map``.
+
+    ``axis_names`` (the modern "these axes are Manual" set) maps to the
+    legacy ``auto`` complement; ``check_vma`` maps to ``check_rep``.
+    """
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=bool(check_vma))
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if f is None:
+        return lambda g: _shard_map(g, **kw)
+    return _shard_map(f, **kw)
+
+
+def _compat_set_mesh(mesh):
+    """``jax.set_mesh`` fallback: ``jax.sharding.Mesh`` has been a
+    context manager since long before ``set_mesh`` existed, and entering
+    it is the legacy spelling of "make this the ambient mesh"."""
+    return mesh
+
+
+class _EmptyAbstractMesh:
+    """Stand-in for ``jax.sharding.get_abstract_mesh()`` on JAX versions
+    without abstract-mesh tracking; ``empty=True`` tells callers to fall
+    back to their concrete mesh."""
+
+    empty = True
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat_shard_map
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _compat_set_mesh
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _EmptyAbstractMesh
+
+
+install()

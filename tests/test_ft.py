@@ -36,7 +36,10 @@ def _make_build(log):
 
         def step_fn(state, step, weights):
             import time
-            time.sleep(0.002)   # stable baseline duration for straggler
+            # baseline duration for the straggler detector: long enough
+            # that scheduler jitter under a loaded CI box stays well
+            # below the 3x slow-pod inflation (2ms flaked under load)
+            time.sleep(0.005)
             log.append((step, n_pods, tuple(np.asarray(weights))))
             return dict(state, x=state["x"] + step)
 
