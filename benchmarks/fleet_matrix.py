@@ -1,0 +1,102 @@
+"""Fleet scaling matrix: aggregate signals/sec vs looped Sessions.
+
+The fleet API's claim is that reconstructing B networks as ONE compiled
+program beats running B independent ``Session``s back to back: the
+batched program amortizes dispatch overhead across the whole batch
+(exactly the paper's multi-signal argument, one level up — the
+parallel axis is networks instead of signals). This benchmark measures
+aggregate throughput (total signals consumed / wall seconds) for
+B in {1, 4, 8, 16}, fleet vs loop, same specs and seeds, and lands in
+``BENCH_gson.json: fleet_matrix`` — the perf trajectory future PRs
+regress against.
+
+Both sides are warmed up once per batch size (jit compile excluded) and
+run the full iteration budget (QE threshold unreachable) so the work
+per network is identical.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro import gson
+from repro.core.gson.state import GSONParams
+
+COLS = ["variant", "batch", "iters_per_net", "fleet_wall", "fleet_sps",
+        "loop_wall", "loop_sps", "speedup"]
+
+BATCHES = (1, 4, 8, 16)
+
+# both fleet-capable strategies: "multi" pays one host dispatch per
+# iteration, so batching B networks into one program divides the
+# dispatch/sync overhead by B (the big win); "multi-fused" already
+# amortizes dispatch on device, so its fleet win is the smaller
+# batched-op efficiency
+VARIANTS = ("multi", "multi-fused")
+
+
+def _spec(variant: str, iters: int) -> gson.RunSpec:
+    return gson.RunSpec(
+        variant=variant,
+        model=GSONParams(model="gwr", insertion_threshold=0.3),
+        sampler="sphere",
+        capacity=128, max_deg=12,
+        max_iterations=iters, check_every=20,
+        qe_threshold=1e-9,              # never converges: fixed workload
+        n_probe=256)
+
+
+def _run_fleet(spec: gson.RunSpec, B: int) -> int:
+    fleet = gson.FleetSession(gson.FleetSpec.broadcast(spec,
+                                                       seeds=range(B)))
+    fleet.run()
+    return sum(int(c.signals.sum()) for c in fleet.cohorts)
+
+
+def _run_loop(spec: gson.RunSpec, B: int) -> int:
+    total = 0
+    for s in range(B):
+        sess = gson.Session(spec, seed=s)
+        sess.run()
+        total += int(sess.state.signal_count)
+    return total
+
+
+def bench_at_batch(variant: str, B: int, iters: int) -> dict:
+    spec = _spec(variant, iters)
+    _run_fleet(spec, B)                 # warmup: compile both programs
+    _run_loop(spec, 1)
+    t0 = time.perf_counter()
+    sig_fleet = _run_fleet(spec, B)
+    t_fleet = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sig_loop = _run_loop(spec, B)
+    t_loop = time.perf_counter() - t0
+    return {
+        "variant": variant,
+        "batch": B,
+        "iters_per_net": iters,
+        "fleet_wall": round(t_fleet, 3),
+        "fleet_sps": round(sig_fleet / t_fleet, 1),
+        "loop_wall": round(t_loop, 3),
+        "loop_sps": round(sig_loop / t_loop, 1),
+        "speedup": round((sig_fleet / t_fleet) / (sig_loop / t_loop), 2),
+    }
+
+
+def run(budget: str = "quick") -> list[dict]:
+    iters = {"quick": 40, "full": 120}[budget]
+    rows = [bench_at_batch(v, B, iters)
+            for v in VARIANTS for B in BATCHES]
+    emit("fleet_matrix", rows, COLS)
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,10 @@
   PYTHONPATH=src python examples/surface_reconstruction.py \
       --surface eight --variant multi --iters 1500 --out eight.obj
 
+  # N surfaces at once, one batched device program, one mesh each:
+  PYTHONPATH=src python examples/surface_reconstruction.py \
+      --fleet 4 --variant multi-fused --iters 800 --out meshes.obj
+
 Built on the composable ``repro.gson`` API: the run is declared as a
 ``RunSpec`` whose variant / model / sampler / backend are names resolved
 through the registries (``--variant`` choices are enumerated from
@@ -15,7 +19,13 @@ automatically), and driven by a streaming ``gson.Session``:
     re-running with ``--resume`` continues from the newest snapshot —
     the same signal stream, as if the run had never stopped.
 
-After the run the reconstructed topology is validated (Euler
+``--fleet N`` reconstructs N surfaces concurrently — one sampler each,
+cycling through ``gson.SAMPLERS`` — as a ``gson.FleetSession``: every
+network steps inside the same vmapped program (grouped into one cohort
+per distinct insertion threshold), streams its own progress rows, and
+exports its own mesh (``--out base.obj`` -> ``base_0_sphere.obj``, ...).
+
+After the run each reconstructed topology is validated (Euler
 characteristic vs the surface's known genus) and optionally exported as
 a Wavefront .obj.
 """
@@ -83,10 +93,65 @@ def build_spec(args) -> gson.RunSpec:
         check_every=25, max_iterations=args.iters)
 
 
+def report(state, stats, surface: str, variant: str, out: str | None):
+    v, e, f, chi = metrics.euler_characteristic(state)
+    expect_chi = 2 - 2 * GENUS.get(surface, 0)
+    print(f"\n{surface} via {variant}: converged="
+          f"{stats.converged} units={stats.units} edges={e} faces={f}")
+    print(f"Euler characteristic {chi} (target {expect_chi}, genus "
+          f"{GENUS.get(surface, 0)})  signals={stats.signals} "
+          f"discarded={stats.discarded}")
+    if out:
+        nv, nf = export_obj(state, out)
+        print(f"wrote {out}: {nv} vertices, {nf} faces")
+
+
+def run_fleet(args) -> None:
+    """N surfaces, one fleet run, one mesh per network."""
+    import os
+
+    surfaces = sorted(gson.SAMPLERS.names())
+    picks = [surfaces[i % len(surfaces)] for i in range(args.fleet)]
+    specs = tuple(build_spec(args).replace(
+        sampler=s,
+        model=gson.GSONParams(
+            model="soam", insertion_threshold=THRESH.get(s, 0.25),
+            age_max=64.0, eps_b=0.1, eps_n=0.01, stuck_window=60))
+        for s in picks)
+    fspec = gson.FleetSpec(specs, tuple(range(args.fleet)))
+    if args.resume:
+        if not args.checkpoint_dir:
+            raise SystemExit("--resume requires --checkpoint-dir")
+        sess = gson.FleetSession.restore(
+            fspec, args.checkpoint_dir, verbose=True,
+            checkpoint_every=args.checkpoint_every)
+        print(f"resumed at iterations {list(sess.iterations)}")
+    else:
+        sess = gson.FleetSession(
+            fspec, verbose=True, checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=(args.checkpoint_every
+                              if args.checkpoint_dir else 0))
+    print(f"fleet of {args.fleet} networks "
+          f"({', '.join(picks)}) in {len(sess.cohorts)} cohort(s)")
+    sess.run()
+    if args.checkpoint_dir:
+        sess.checkpoint()
+    stem, ext = (os.path.splitext(args.out) if args.out
+                 else (None, None))
+    for i, surface in enumerate(picks):
+        state, stats = sess.result(i)
+        out = f"{stem}_{i}_{surface}{ext}" if args.out else None
+        report(state, stats, surface, args.variant, out)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--surface", default="sphere",
                     choices=sorted(gson.SAMPLERS.names()))
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="reconstruct N surfaces (cycling through the "
+                         "registered samplers) as one fleet run, one "
+                         "mesh per network")
     ap.add_argument("--variant", default="multi",
                     choices=sorted(gson.VARIANTS.names()) + ["kernel"])
     ap.add_argument("--superstep", type=int, default=64,
@@ -102,6 +167,10 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="continue from the newest snapshot")
     args = ap.parse_args(argv)
+
+    if args.fleet:
+        run_fleet(args)
+        return
 
     spec = build_spec(args)
     if args.resume:

@@ -114,6 +114,32 @@ def init_state(
     )
 
 
+def init_fleet(
+    rngs: jax.Array,
+    *,
+    capacity: int,
+    dim: int,
+    max_deg: int,
+    seed_points: jax.Array,
+    init_threshold: float = 0.2,
+) -> NetworkState:
+    """Batched :func:`init_state`: one network per leading row.
+
+    ``rngs``: (B,) PRNG keys; ``seed_points``: (B, n_seed, dim). Returns
+    a ``NetworkState`` whose every array leaf carries a leading ``(B,)``
+    batch axis — the stacked layout the fleet programs in
+    ``core/gson/fleet.py`` step as one compiled call. Each network is
+    bit-identical to ``init_state(rngs[i], seed_points=seed_points[i])``
+    run under the same vmapped program (per-slice values are batch-size
+    invariant).
+    """
+    return jax.vmap(
+        lambda r, sp: init_state(r, capacity=capacity, dim=dim,
+                                 max_deg=max_deg, seed_points=sp,
+                                 init_threshold=init_threshold)
+    )(rngs, seed_points)
+
+
 @dataclass(frozen=True)
 class GSONParams:
     """Hyper-parameters shared by GNG / GWR / SOAM update rules.

@@ -24,18 +24,39 @@ drive it as a streaming, resumable session:
 
     sess = gson.Session.restore(spec, "ckpt/eight")   # after a crash
 
+Many runs batch into ONE device program through the fleet API: a
+``FleetSpec`` stacks B same-shaped specs (different samplers / seeds /
+run limits are fine — that is a *cohort*, compiled once) and a
+``FleetSession`` drives all B networks through the vmapped multi-signal
+step, with per-network convergence masks freezing finished networks in
+place. A session IS the B=1 view of the same program, so fleet network
+i is bit-identical to ``Session(spec_i, seed=seed_i)``:
+
+    fspec = gson.FleetSpec.broadcast(
+        spec.replace(variant="multi-fused"),
+        seeds=range(8),                       # 8 reconstructions ...
+        samplers=gson.SAMPLERS.names() * 2)   # ... 4 surfaces each x2
+    fleet = gson.FleetSession(fspec)
+    for row in fleet.stream(budget=500):      # rows tagged per network
+        print(row["network"], row["iteration"], row["qe"])
+    fleet.resume()
+    state3, stats3 = fleet.result(3)          # unbatched per-network
+
 Registries: ``VARIANTS`` (single / indexed / multi / multi-fused),
 ``MODELS`` (gng / gwr / soam), ``SAMPLERS`` (benchmark surfaces; any
 ``repro.data.pointclouds`` stream or ``(rng, n) -> points`` callable is
 accepted directly), ``BACKENDS`` (reference / pallas). Registering a new
 entry makes it visible everywhere a registry is enumerated — e.g.
-``benchmarks/run.py``'s variant matrix.
+``benchmarks/run.py``'s variant matrix — and ``register`` doubles as a
+decorator: ``@SAMPLERS.register("my-surface")``.
 
 The legacy ``repro.core.gson.engine.GSONEngine`` remains as a thin
 deprecation shim over this package.
 """
+from repro.core.gson.fleet import FleetState
 from repro.core.gson.state import GSONParams, NetworkState
 from repro.core.gson.superstep import SuperstepConfig
+from repro.gson.fleet import FleetSession, FleetSpec, run_fleet
 from repro.gson.registry import (BACKENDS, MODELS, SAMPLERS, VARIANTS,
                                  ModelDef, Registry, resolve_backend,
                                  resolve_model, resolve_sampler)
@@ -48,10 +69,11 @@ from repro.gson.variants import (DEFAULT_BBOX, FusedConfig, IndexedConfig,
 
 __all__ = [
     "BACKENDS", "MODELS", "SAMPLERS", "VARIANTS",
-    "DEFAULT_BBOX", "FusedConfig", "GSONParams", "IndexedConfig",
+    "DEFAULT_BBOX", "FleetSession", "FleetSpec", "FleetState",
+    "FusedConfig", "GSONParams", "IndexedConfig",
     "ModelDef", "MultiConfig", "NetworkState", "Registry", "RunSpec",
     "RunStats", "Runtime", "Session", "SingleConfig", "StepResult",
     "SuperstepConfig", "VariantStrategy", "check_convergence",
     "resolve", "resolve_backend", "resolve_model", "resolve_sampler",
-    "resolve_variant", "run",
+    "resolve_variant", "run", "run_fleet",
 ]

@@ -1,0 +1,479 @@
+"""Fleet API: many independent reconstructions as one device program.
+
+A :class:`FleetSpec` declares B runs — one ``RunSpec`` + seed per
+network. :class:`FleetSession` stacks them into batched
+:class:`~repro.core.gson.fleet.FleetState`s and drives all B networks
+through the vmapped fleet programs in ``repro.core.gson.fleet``:
+
+  * **cohorts** — networks whose specs share every jit cache key
+    (variant, model params, variant config, backend, pool geometry,
+    check cadence) are grouped into one *cohort* that compiles ONCE;
+    samplers, seeds, and per-network iteration/signal budgets may
+    differ freely within a cohort. A fleet of mixed shapes simply
+    produces several cohorts, each its own compiled program.
+  * **per-network convergence** — converged networks (and networks
+    whose budgets are spent) freeze in place via a batched select, so
+    the batch shape stays static while stragglers keep running: the
+    serving engine's wave pattern, applied to whole networks.
+  * **bit-identity** — ``Session`` is the B=1 view of the same
+    programs, so network i of a fleet run is bit-identical to a
+    ``Session(spec_i, seed=seed_i)`` run (``tests/test_fleet.py``).
+
+``FleetSession`` carries the same contract as ``Session``: streaming
+history rows (tagged with their ``network`` index), budgeted
+``run(budget)`` / ``resume()``, and atomic ``checkpoint()`` /
+``FleetSession.restore`` of the whole stacked fleet through
+``repro.checkpoint.manager``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.core.gson import fleet as fleet_core
+from repro.core.gson import metrics
+from repro.gson.session import RunStats, _key_data, _wrap_key
+from repro.gson.spec import RunSpec, resolve
+
+HistoryCallback = Callable[[dict], None]
+
+_BIG = np.int64(1) << 60
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """B runs: one ``RunSpec`` + PRNG seed per network."""
+
+    specs: tuple[RunSpec, ...]
+    seeds: tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.specs:
+            raise ValueError("a fleet needs at least one RunSpec")
+        if len(self.specs) != len(self.seeds):
+            raise ValueError(
+                f"{len(self.specs)} specs vs {len(self.seeds)} seeds — "
+                "one seed per network")
+
+    @classmethod
+    def broadcast(cls, spec: RunSpec, seeds: Sequence[int] | None = None,
+                  *, samplers: Sequence | None = None,
+                  count: int | None = None) -> "FleetSpec":
+        """One spec over many seeds and/or samplers.
+
+        ``samplers`` (names or objects) swap the sampler axis per
+        network — same pool shape, so the whole fleet stays one cohort.
+        With only ``count``, seeds default to ``range(count)``.
+        """
+        if seeds is None:
+            n = (count if count is not None
+                 else len(samplers) if samplers is not None else 1)
+            seeds = range(n)
+        seeds = tuple(int(s) for s in seeds)
+        if samplers is None:
+            specs = tuple(spec for _ in seeds)
+        else:
+            samplers = tuple(samplers)
+            if len(samplers) != len(seeds):
+                raise ValueError(
+                    f"{len(samplers)} samplers vs {len(seeds)} seeds")
+            specs = tuple(spec.replace(sampler=s) for s in samplers)
+        return cls(specs, seeds)
+
+    @property
+    def batch(self) -> int:
+        return len(self.specs)
+
+
+def _cohort_key(spec: RunSpec, strategy, rt):
+    """Everything that is a static jit cache key of the fleet programs.
+
+    Samplers, seeds and run limits (max_iterations / max_signals) are
+    per-network operands and deliberately NOT part of the key.
+    """
+    return (strategy.name, rt.params, rt.vcfg, rt.find_winners,
+            spec.capacity, spec.dim, spec.max_deg, spec.check_every,
+            spec.qe_threshold, spec.n_probe)
+
+
+class Cohort:
+    """One compiled program's worth of networks (same static shape)."""
+
+    def __init__(self, rows):
+        # rows: [(global_index, spec, seed, strategy, rt), ...]
+        self.members = [r[0] for r in rows]
+        self.specs = [r[1] for r in rows]
+        self.seeds = [r[2] for r in rows]
+        self.strategy = rows[0][3]
+        rts = [r[4] for r in rows]
+        rt0 = rts[0]
+        self.spec = self.specs[0]          # shape-defining spec
+        self.params = rt0.params
+        self.find_winners = rt0.find_winners
+        self.cfg = self.strategy.fleet_cfg(self.spec, rt0.params,
+                                           rt0.vcfg)
+        self.sampler = fleet_core.as_fleet_sampler(
+            [rt.sampler for rt in rts])
+        B = len(rows)
+        self.max_iterations = np.asarray(
+            [s.max_iterations for s in self.specs], np.int64)
+        self.max_signals = np.asarray(
+            [s.max_signals for s in self.specs], np.int64)
+        self.fstate: fleet_core.FleetState | None = None
+        self.probes = None
+        # host mirrors of the per-network run status
+        self.iterations = np.zeros(B, np.int64)
+        self.converged = np.zeros(B, bool)
+        self.signals = np.zeros(B, np.int64)
+
+    @property
+    def batch(self) -> int:
+        return len(self.members)
+
+    def start(self) -> None:
+        if self.fstate is not None:
+            return
+        rng0 = jnp.stack([jax.random.key(s) for s in self.seeds])
+        self.fstate, self.probes = fleet_core.fleet_init(
+            rng0, sampler=self.sampler, capacity=self.spec.capacity,
+            dim=self.spec.dim, max_deg=self.spec.max_deg,
+            n_probe=self.spec.n_probe,
+            init_threshold=self.params.insertion_threshold)
+
+    def active(self) -> np.ndarray:
+        """(B,) which networks still have work (Session.active, batched)."""
+        return (~self.converged
+                & (self.iterations < self.max_iterations)
+                & (self.signals < self.max_signals))
+
+    def tick(self, budget: np.ndarray):
+        """Advance each network by up to ``budget[i]`` iterations.
+
+        "device" strategies run one fleet superstep (up to the variant's
+        superstep length per network); "host" strategies run exactly one
+        host-dispatched iteration plus the cadenced convergence check.
+        Returns ``(steps, checked)`` — per-network iterations executed
+        and which networks have a fresh history row to emit.
+        """
+        act = self.active() & (budget > 0)
+        zeros = np.zeros(self.batch, np.int64)
+        if not act.any():
+            return zeros, zeros.astype(bool)
+        if self.strategy.fleet_mode == "device":
+            ss = self.cfg
+            sig_left = self.max_signals - self.signals
+            max_steps = np.minimum.reduce([
+                np.full(self.batch, ss.length, np.int64),
+                self.max_iterations - self.iterations,
+                -(-sig_left // ss.max_parallel),
+                budget])
+            # like Session: an active network always gets >= 1 step
+            max_steps = np.where(act, np.maximum(max_steps, 1), 0)
+            self.fstate, steps = fleet_core.run_fleet_superstep(
+                self.fstate, self.probes,
+                jnp.asarray(max_steps, jnp.int32),
+                sampler=self.sampler, params=self.params, cfg=self.cfg,
+                find_winners=self.find_winners)
+            steps = np.asarray(steps).astype(np.int64)
+            checked = act & (steps > 0)   # one row per superstep
+            self.converged = np.asarray(self.fstate.converged).copy()
+        else:
+            self.fstate = fleet_core.fleet_iterate(
+                self.fstate, jnp.asarray(act), sampler=self.sampler,
+                params=self.params, cfg=self.cfg,
+                find_winners=self.find_winners)
+            steps = act.astype(np.int64)
+            checked = act & ((self.iterations + steps)
+                             % self.spec.check_every == 0)
+            if checked.any():
+                self.fstate = fleet_core.fleet_check(
+                    self.fstate, self.probes, jnp.asarray(checked),
+                    params=self.params, cfg=self.cfg)
+                self.converged = np.asarray(self.fstate.converged).copy()
+        self.iterations = self.iterations + steps
+        self.signals = np.asarray(
+            self.fstate.nets.signal_count).astype(np.int64)
+        return steps, checked
+
+
+class FleetSession:
+    """B experiments with one ``Session``-shaped driver.
+
+    Accepts a :class:`FleetSpec` (or a sequence of ``RunSpec``s plus
+    ``seeds``); groups networks into cohorts; streams per-network
+    history rows; checkpoints/restores the whole stacked fleet.
+    """
+
+    def __init__(self, fleet: FleetSpec | Sequence[RunSpec],
+                 seeds: Sequence[int] | None = None, *,
+                 on_history: HistoryCallback | None = None,
+                 verbose: bool = False, checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 0, keep: int = 3):
+        if not isinstance(fleet, FleetSpec):
+            specs = tuple(fleet)
+            fleet = FleetSpec(
+                specs,
+                tuple(seeds) if seeds is not None
+                else tuple(range(len(specs))))
+        elif seeds is not None:
+            raise ValueError("seeds are carried by the FleetSpec")
+        self.fspec = fleet
+        groups: dict = {}
+        for i, (spec, seed) in enumerate(zip(fleet.specs, fleet.seeds)):
+            strategy, rt = resolve(spec)
+            if not getattr(strategy, "fleet_capable", False):
+                raise ValueError(
+                    f"variant {strategy.name!r} is not fleet-capable "
+                    "(no batched step program); use a multi-signal "
+                    "variant or run it as individual Sessions")
+            key = _cohort_key(spec, strategy, rt)
+            groups.setdefault(key, []).append((i, spec, seed, strategy,
+                                               rt))
+        self.cohorts = [Cohort(rows) for rows in groups.values()]
+        self._where: dict[int, tuple[Cohort, int]] = {}
+        for c in self.cohorts:
+            for local, i in enumerate(c.members):
+                self._where[i] = (c, local)
+        self.stats = [RunStats() for _ in range(fleet.batch)]
+        self._callbacks: list[HistoryCallback] = []
+        if on_history is not None:
+            self._callbacks.append(on_history)
+        self.verbose = verbose
+        self.checkpoint_every = checkpoint_every
+        self._last_ckpt = -1
+        self._mgr = (ckpt.CheckpointManager(checkpoint_dir, keep=keep)
+                     if checkpoint_dir else None)
+
+    # ------------------------------------------------------------------
+    @property
+    def batch(self) -> int:
+        return self.fspec.batch
+
+    @property
+    def started(self) -> bool:
+        return self.cohorts[0].fstate is not None
+
+    @property
+    def active(self) -> bool:
+        return any(c.active().any() for c in self.cohorts)
+
+    @property
+    def iterations(self) -> np.ndarray:
+        """(B,) per-network iteration counters, fleet order."""
+        out = np.zeros(self.batch, np.int64)
+        for c in self.cohorts:
+            out[c.members] = c.iterations
+        return out
+
+    @property
+    def converged(self) -> np.ndarray:
+        out = np.zeros(self.batch, bool)
+        for c in self.cohorts:
+            out[c.members] = c.converged
+        return out
+
+    def active_network(self, i: int) -> bool:
+        """More work to do for network i? (``Session.active``, indexed)"""
+        c, local = self._where[i]
+        return bool(c.active()[local])
+
+    def add_callback(self, f: HistoryCallback) -> None:
+        self._callbacks.append(f)
+
+    def network(self, i: int):
+        """The i-th network's current (unbatched) ``NetworkState``."""
+        self._start()
+        c, local = self._where[i]
+        return c.fstate.network(local)
+
+    # ------------------------------------------------------------------
+    def _start(self) -> None:
+        for c in self.cohorts:
+            c.start()
+
+    def _emit(self, row: dict) -> None:
+        self.stats[row["network"]].history.append(row)
+        for f in self._callbacks:
+            f(row)
+        if self.verbose:
+            print(f"  net={row['network']:3d} it={row['iteration']:6d} "
+                  f"units={row['units']:6d} qe={row['qe']:.5f}")
+
+    def stream(self, budget: int | None = None) -> Iterator[dict]:
+        """Advance the fleet, yielding history rows as checks complete.
+
+        ``budget`` bounds the iterations executed per network by THIS
+        call; the session stays live afterwards and can be resumed.
+        """
+        self._start()
+        spent = np.zeros(self.batch, np.int64)
+        t_wall = time.perf_counter()
+        try:
+            while True:
+                progressed = False
+                for c in self.cohorts:
+                    left = ((budget - spent[c.members])
+                            if budget is not None
+                            else np.full(c.batch, _BIG))
+                    t0 = time.perf_counter()
+                    steps, checked = c.tick(np.maximum(left, 0))
+                    dt = time.perf_counter() - t0
+                    if not steps.any():
+                        continue
+                    progressed = True
+                    spent[c.members] += steps
+                    # shared-program cost attributed by work done, so
+                    # per-network stats sum to the actual wall time and
+                    # frozen networks accrue nothing
+                    share = dt / int(steps.sum())
+                    for local, m in enumerate(c.members):
+                        self.stats[m].time_step += share * int(
+                            steps[local])
+                    if checked.any():
+                        units = np.asarray(c.fstate.nets.n_active)
+                        qe = np.asarray(c.fstate.qe)
+                        for local in np.nonzero(checked)[0]:
+                            row = {
+                                "network": c.members[local],
+                                "iteration": int(c.iterations[local]),
+                                "units": int(units[local]),
+                                "signals": int(c.signals[local]),
+                                "qe": float(qe[local]),
+                            }
+                            self._emit(row)
+                            yield row
+                if not progressed:
+                    break
+                progress = int(self.iterations.max())
+                if (self._mgr is not None and self.checkpoint_every > 0
+                        and progress - self._last_ckpt
+                        >= self.checkpoint_every):
+                    self.checkpoint()
+        finally:
+            # the fleet shares one wall clock: attribute it by work
+            # done (equal split when nothing ran), so per-network
+            # time_total sums to the actual wall time instead of B x it
+            dt = time.perf_counter() - t_wall
+            total = int(spent.sum())
+            for i, st in enumerate(self.stats):
+                st.time_total += (dt * int(spent[i]) / total
+                                  if total else dt / self.batch)
+                st.iterations = int(self.iterations[i])
+
+    def run(self, budget: int | None = None) -> list[RunStats]:
+        """Advance until every network converged / exhausted its limits
+        (or its per-network ``budget`` for this call)."""
+        for _ in self.stream(budget):
+            pass
+        return self.stats
+
+    def resume(self, budget: int | None = None) -> list[RunStats]:
+        return self.run(budget)
+
+    # ------------------------------------------------------------------
+    def result(self, i: int):
+        """Finalize network i: ``(NetworkState, RunStats)``."""
+        self._start()
+        c, local = self._where[i]
+        state = c.fstate.network(local)
+        st = self.stats[i]
+        st.iterations = int(c.iterations[local])
+        st.signals = int(state.signal_count)
+        st.discarded = int(state.discarded)
+        st.units = int(state.n_active)
+        st.connections = metrics.edge_count(state)
+        st.converged = bool(c.converged[local])
+        qe = float(np.asarray(c.fstate.qe)[local])
+        if np.isnan(qe):
+            qe = float(metrics.quantization_error(state,
+                                                  c.probes[local]))
+        st.quantization_error = qe
+        return state, st
+
+    def results(self) -> list:
+        """All networks, fleet order: ``[(state, stats), ...]``."""
+        return [self.result(i) for i in range(self.batch)]
+
+    # ------------------------------------------------------------------
+    # checkpointing: the whole stacked fleet, one atomic snapshot
+    def _savable_tree(self) -> dict:
+        tree = {}
+        for ci, c in enumerate(self.cohorts):
+            fs = c.fstate
+            tree[f"cohort{ci}"] = {
+                "nets": fs.nets.replace(rng=_key_data(fs.nets.rng)),
+                "rng": _key_data(fs.rng),
+                "iteration": fs.iteration,
+                "converged": fs.converged,
+                "qe": fs.qe,
+            }
+        return tree
+
+    def checkpoint(self, step: int | None = None) -> None:
+        """Atomic snapshot via ``repro.checkpoint.manager``."""
+        if self._mgr is None:
+            raise RuntimeError(
+                "FleetSession was created without checkpoint_dir")
+        self._start()
+        step = int(self.iterations.max()) if step is None else step
+        extra = {
+            "iterations": [int(x) for x in self.iterations],
+            "converged": [bool(x) for x in self.converged],
+            "histories": [st.history for st in self.stats],
+            "checkpoint_every": self.checkpoint_every,
+        }
+        self._mgr.save(self._savable_tree(), step, extra)
+        self._last_ckpt = int(self.iterations.max())
+
+    @classmethod
+    def restore(cls, fleet: FleetSpec | Sequence[RunSpec],
+                checkpoint_dir: str, step: int | None = None,
+                **kw) -> "FleetSession":
+        """Rebuild a live fleet from a snapshot directory.
+
+        PRNG state is per network inside the snapshot, and probes are a
+        pure function of the fleet seeds, so the restored fleet
+        continues the exact signal streams of the original run.
+        """
+        sess = cls(fleet, checkpoint_dir=checkpoint_dir, **kw)
+        sess._start()
+        tree, _, extra = sess._mgr.restore(sess._savable_tree(), step)
+        for ci, c in enumerate(sess.cohorts):
+            t = tree[f"cohort{ci}"]
+            nets = t["nets"].replace(rng=_wrap_key(t["nets"].rng))
+            c.fstate = fleet_core.FleetState(
+                nets=nets,
+                rng=_wrap_key(t["rng"]),
+                iteration=jnp.asarray(t["iteration"], jnp.int32),
+                converged=jnp.asarray(t["converged"], bool),
+                qe=jnp.asarray(t["qe"], jnp.float32))
+            c.iterations = np.asarray(t["iteration"]).astype(np.int64)
+            c.converged = np.asarray(t["converged"]).astype(bool)
+            c.signals = np.asarray(nets.signal_count).astype(np.int64)
+        for st, hist in zip(sess.stats, extra.get("histories", [])):
+            st.history = list(hist)
+        for st, it in zip(sess.stats, extra.get("iterations", [])):
+            st.iterations = int(it)
+        if "checkpoint_every" not in kw:
+            sess.checkpoint_every = int(extra.get("checkpoint_every", 0))
+        sess._last_ckpt = int(sess.iterations.max())
+        return sess
+
+
+def run_fleet(fleet: FleetSpec | Sequence[RunSpec],
+              seeds: Sequence[int] | None = None, *,
+              verbose: bool = False,
+              on_history: HistoryCallback | None = None) -> list:
+    """One-shot: run every network to termination; returns
+    ``[(state, stats), ...]`` in fleet order."""
+    sess = FleetSession(fleet, seeds, verbose=verbose,
+                        on_history=on_history)
+    sess.run()
+    return sess.results()

@@ -60,6 +60,7 @@ class Registry(Generic[T]):
                 f"{', '.join(self.names())}") from None
 
     def names(self) -> tuple[str, ...]:
+        """Registered names, sorted (the order misses are reported in)."""
         return tuple(sorted(self._entries))
 
     def items(self):
@@ -73,6 +74,9 @@ class Registry(Generic[T]):
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}: {', '.join(self.names())})"
 
 
 # ---------------------------------------------------------------------------

@@ -31,8 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import manager as ckpt
+from repro.core.gson import fleet as fleet_core
 from repro.core.gson import metrics
-from repro.core.gson.state import init_state
 from repro.gson.spec import RunSpec, resolve
 
 
@@ -120,6 +120,20 @@ class Session:
         return True
 
     # ------------------------------------------------------------------
+    def _init_from(self, rng0: jax.Array):
+        """State + probes + sampling key through the fleet core's
+        batched init at B=1 — the SAME jitted program a
+        ``repro.gson.fleet.FleetSession`` runs for B networks, so a
+        session and a same-seed fleet slot start bit-identically."""
+        spec, p = self.spec, self.rt.params
+        fs, probes = fleet_core.fleet_init(
+            rng0[None],
+            sampler=fleet_core.BroadcastSampler(self.rt.sampler),
+            capacity=spec.capacity, dim=spec.dim, max_deg=spec.max_deg,
+            n_probe=spec.n_probe,
+            init_threshold=p.insertion_threshold)
+        return fs.network(0), probes[0], fs.rng[0]
+
     def _start(self) -> None:
         if self.started:
             return
@@ -127,15 +141,8 @@ class Session:
         # probe init, and BENCH_gson.json per-iteration rows divide
         # time_total by iterations — counting setup here would skew the
         # perf trajectory against the PR1 baseline
-        spec, p = self.spec, self.rt.params
-        rng, k_init, k_probe, k_seed = jax.random.split(self._rng0, 4)
-        seed_pts = self.rt.sampler(k_seed, 2)
-        self.state = init_state(
-            k_init, capacity=spec.capacity, dim=spec.dim,
-            max_deg=spec.max_deg, seed_points=seed_pts,
-            init_threshold=p.insertion_threshold)
-        self.rt.probes = self.rt.sampler(k_probe, spec.n_probe)
-        self._rng = rng
+        self.state, self.rt.probes, self._rng = self._init_from(
+            self._rng0)
         self.strategy.prepare(self.rt)
 
     def _emit(self, row: dict) -> None:
@@ -259,9 +266,9 @@ class Session:
         tree, _, extra = sess._mgr.restore(sess._savable_tree(), step)
         sess._rng0 = _wrap_key(tree["rng0"])
         # probes are a pure function of the initial key: re-derive them
-        # so convergence checks match the original run exactly
-        _, _, k_probe, _ = jax.random.split(sess._rng0, 4)
-        sess.rt.probes = sess.rt.sampler(k_probe, spec.n_probe)
+        # (through the same jitted init program) so convergence checks
+        # match the original run exactly
+        _, sess.rt.probes, _ = sess._init_from(sess._rng0)
         state = tree["state"]
         sess.state = state.replace(rng=_wrap_key(state.rng))
         sess._rng = _wrap_key(tree["rng"])

@@ -51,8 +51,11 @@ class RunSpec:
 
 def resolve_variant(variant: str | Any) -> VariantStrategy:
     if isinstance(variant, str):
-        return VARIANTS.get(variant)
+        variant = VARIANTS.get(variant)
     if isinstance(variant, type):
+        # classes registered via the @VARIANTS.register decorator (or
+        # passed directly) are instantiated here: strategies are
+        # stateless, so a fresh instance is equivalent to a singleton
         variant = variant()
     if not isinstance(variant, VariantStrategy):
         raise TypeError(

@@ -18,6 +18,17 @@ single-signal chunk size with the fused superstep length.
 
 Strategies are stateless singletons registered in ``VARIANTS``; per-run
 state lives in the :class:`Runtime` the session owns.
+
+The multi-signal strategies ("multi", "multi-fused") execute through
+the **fleet core** (``repro.core.gson.fleet``): their ``step`` is the
+B=1 view of the same vmapped device program that
+``repro.gson.fleet.FleetSession`` drives for B networks at once, so a
+session run is bit-identical per network to a fleet run with the same
+seeds. A fleet-capable strategy declares ``fleet_capable = True``, a
+``fleet_mode`` ("host" = one device call per iteration, "device" =
+whole supersteps on device) and a ``fleet_cfg(spec, params, vcfg)``
+resolver for the static program config. The sequential reference
+variants ("single", "indexed") remain host loops by design.
 """
 from __future__ import annotations
 
@@ -27,16 +38,16 @@ from dataclasses import dataclass, field
 from typing import Any, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.gson import fleet as fleet_core
 from repro.core.gson import metrics
 from repro.core.gson.index import indexed_single_signal_scan
-from repro.core.gson.multi import (multi_signal_step, refresh_topology,
-                                   soam_converged)
+from repro.core.gson.multi import refresh_topology, soam_converged
 from repro.core.gson.single import single_signal_scan
 from repro.core.gson.state import GSONParams
-from repro.core.gson.superstep import (SuperstepConfig, next_pow2,
-                                       run_superstep)
+from repro.core.gson.superstep import SuperstepConfig, next_pow2
 from repro.gson.registry import MODELS, VARIANTS
 
 DEFAULT_BBOX = ((-3.0, -3.0, -3.0), (3.0, 3.0, 3.0))
@@ -194,23 +205,87 @@ class _HostVariant:
         return StepResult(state, rng, 1, checked, done, qe, timings)
 
 
-class MultiVariant(_HostVariant):
+class _FleetBacked:
+    """Shared base of the strategies that execute through the fleet
+    core (``repro.core.gson.fleet``): ONE step function, used at B=1 by
+    the session and at B=N by ``repro.gson.fleet.FleetSession`` — which
+    is what makes a fleet network bit-identical to a same-seed session.
+
+    ``fleet_mode`` selects the dispatch granularity the fleet driver
+    uses: "host" re-crosses the host<->device boundary every iteration
+    (the paper's multi-signal loop), "device" runs whole supersteps on
+    device (``run_fleet_superstep``).
+    """
+
+    fleet_capable = True
+    fleet_mode = "host"
+
+    def fleet_cfg(self, spec, params: GSONParams,
+                  vcfg) -> SuperstepConfig:
+        """Resolve the static fleet-program config (a jit cache key)
+        from the spec-level knobs. Must agree between session (B=1)
+        and fleet (B=N) callers — both call exactly this."""
+        raise NotImplementedError
+
+    def prepare(self, rt: Runtime) -> None:
+        rt.scratch["fleet_cfg"] = self.fleet_cfg(rt.spec, rt.params,
+                                                 rt.vcfg)
+        rt.scratch["fleet_sampler"] = fleet_core.BroadcastSampler(
+            rt.sampler)
+
+    def convergence(self, rt: Runtime, state):
+        return check_convergence(rt, state)
+
+
+class MultiVariant(_FleetBacked):
+    """Host-dispatched multi-signal loop on the fleet core (B=1).
+
+    Each session iteration is one ``fleet_iterate`` device call: the
+    signal buffer has the static ``max_parallel`` row count and the
+    device m-schedule masks the first ``m_t = next_pow2(n_active)``
+    rows — the same program the fused superstep (and the fleet) runs,
+    dispatched one iteration at a time.
+    """
+
     name = "multi"
     config_cls = MultiConfig
 
-    def _m(self, rt: Runtime, state) -> int:
-        cfg = rt.vcfg
-        if cfg.fixed_m is not None:
-            return cfg.fixed_m
-        return max(cfg.min_m, min(next_pow2(int(state.n_active)),
-                                  rt.params.max_parallel))
+    def fleet_cfg(self, spec, params, vcfg) -> SuperstepConfig:
+        if vcfg.fixed_m is not None:
+            # exact buffer: the device schedule always yields
+            # min(fixed_m, cap), so no row is ever masked — same
+            # per-iteration compute as the legacy exact-m sampling
+            buf = min(params.max_parallel, vcfg.fixed_m)
+        else:
+            buf = min(params.max_parallel, next_pow2(spec.capacity))
+        return SuperstepConfig(
+            length=1, max_parallel=buf, min_m=vcfg.min_m,
+            fixed_m=vcfg.fixed_m, refresh_every=vcfg.refresh_every,
+            check_every=spec.check_every,
+            qe_threshold=spec.qe_threshold)
 
-    def _update(self, rt: Runtime, state, signals, it: int):
-        refresh = (rt.params.model == "soam"
-                   and it % rt.vcfg.refresh_every == 0)
-        return multi_signal_step(state, signals, rt.params,
-                                 refresh_states=refresh,
-                                 find_winners=rt.find_winners)
+    def step(self, rt: Runtime, state, rng, it: int,
+             max_iters: int) -> StepResult:
+        cfg = rt.scratch["fleet_cfg"]
+        one = jnp.ones((1,), bool)
+        t0 = time.perf_counter()
+        fs = fleet_core.wrap_single(state, rng, it)
+        fs = fleet_core.fleet_iterate(
+            fs, one, sampler=rt.scratch["fleet_sampler"],
+            params=rt.params, cfg=cfg, find_winners=rt.find_winners)
+        it += 1
+        checked = it % rt.check_every == 0
+        done, qe = False, float("nan")
+        if checked:
+            fs = fleet_core.fleet_check(fs, rt.probes[None], one,
+                                        params=rt.params, cfg=cfg)
+            done, qe = bool(fs.converged[0]), float(fs.qe[0])
+        state, rng = fs.network(0), fs.rng[0]
+        state.w.block_until_ready()
+        # sampling runs inside the device program now; the whole
+        # iteration is accounted under "step" like the fused variant
+        return StepResult(state, rng, 1, checked, done, qe,
+                          {"step": time.perf_counter() - t0})
 
 
 class SingleVariant(_HostVariant):
@@ -249,50 +324,50 @@ class IndexedVariant(_HostVariant):
             refresh_every=cfg.refresh_every)
 
 
-class FusedVariant:
-    """Whole iterate-sample-converge loop on device (superstep.py)."""
+class FusedVariant(_FleetBacked):
+    """Whole iterate-sample-converge loop on device (fleet superstep)."""
 
     name = "multi-fused"
+    fleet_mode = "device"
     config_cls = FusedConfig
 
-    def prepare(self, rt: Runtime) -> None:
+    def fleet_cfg(self, spec, params, vcfg) -> SuperstepConfig:
         # spec-level convergence/refresh knobs are the single source of
         # truth; cfg.superstep contributes only the fused-loop shape
-        cfg = rt.vcfg
-        ss = cfg.superstep.resolve(rt.spec.capacity, rt.params)
-        rt.scratch["superstep"] = dataclasses.replace(
+        ss = vcfg.superstep.resolve(spec.capacity, params)
+        return dataclasses.replace(
             ss,
-            refresh_every=cfg.refresh_every,
-            check_every=rt.check_every,
-            qe_threshold=rt.qe_threshold,
-            min_m=cfg.min_m,
-            fixed_m=cfg.fixed_m if cfg.fixed_m is not None else ss.fixed_m)
-
-    def convergence(self, rt: Runtime, state):
-        return check_convergence(rt, state)
+            refresh_every=vcfg.refresh_every,
+            check_every=spec.check_every,
+            qe_threshold=spec.qe_threshold,
+            min_m=vcfg.min_m,
+            fixed_m=(vcfg.fixed_m if vcfg.fixed_m is not None
+                     else ss.fixed_m))
 
     def step(self, rt: Runtime, state, rng, it: int,
              max_iters: int) -> StepResult:
-        ss = rt.scratch["superstep"]
+        ss = rt.scratch["fleet_cfg"]
         # bound by BOTH remaining budgets: iterations, and signals (worst
         # case one iteration consumes max_parallel signals) — overshoot
-        # is at most one iteration's m, like the host loop
+        # is at most one iteration's m, like the host loop. The bound is
+        # a dynamic operand, so partial-length supersteps share one jit
+        # signature instead of retracing per length.
         sig_left = rt.spec.max_signals - int(state.signal_count)
         length = max(1, min(ss.length, max_iters,
                             -(-sig_left // ss.max_parallel)))
         t0 = time.perf_counter()
-        res = run_superstep(
-            state, rng, rt.probes, it,
-            sampler=rt.sampler, params=rt.params,
-            cfg=dataclasses.replace(ss, length=length),
-            find_winners=rt.find_winners)
-        state, rng = res.state, res.rng
+        fs = fleet_core.wrap_single(state, rng, it)
+        fs, steps = fleet_core.run_fleet_superstep(
+            fs, rt.probes[None], jnp.asarray([length], jnp.int32),
+            sampler=rt.scratch["fleet_sampler"], params=rt.params,
+            cfg=ss, find_winners=rt.find_winners)
+        state, rng = fs.network(0), fs.rng[0]
         state.w.block_until_ready()
         dt = time.perf_counter() - t0
         # the fused variant cannot split phases (that is the point):
         # its whole superstep time is accounted under "step"
-        return StepResult(state, rng, int(res.iterations), True,
-                          bool(res.converged), float(res.qe),
+        return StepResult(state, rng, int(steps[0]), True,
+                          bool(fs.converged[0]), float(fs.qe[0]),
                           {"step": dt})
 
 

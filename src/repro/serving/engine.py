@@ -160,7 +160,7 @@ class ServeEngine:
 
 # ---------------------------------------------------------------------------
 # GSON reconstruction serving: many concurrent surface-reconstruction
-# jobs, each a streaming ``repro.gson.Session``, time-sliced round-robin.
+# jobs admitted into fleet slots — one batched device program per wave.
 
 
 @dataclass
@@ -171,30 +171,40 @@ class ReconstructionJob:
     spec: "object"                # repro.gson.RunSpec
     seed: int = 0
     history: list = field(default_factory=list)   # streamed rows
-    session: "object | None" = None
+    session: "object | None" = None   # the FleetSession (or Session) serving it
     stats: "object | None" = None
     done: bool = False
 
 
 class ReconstructionServer:
-    """Wave-based serving of growing-network reconstructions.
+    """Fleet-slot serving of growing-network reconstructions.
 
-    The LM engine above batches *tokens*; this serves *experiments*: a
-    fixed pool of ``slots`` concurrent ``repro.gson.Session`` objects,
-    each advanced by ``slice_iters`` iterations per tick (the budgeted
-    ``Session.run``), so many jobs share one device fairly and progress
-    streams back per job while it is still running. Jobs are declared
-    as ``RunSpec``s — any registered variant/model/sampler/backend
-    combination is servable with no server changes.
+    The LM engine above batches *tokens*; this batches *networks*: up
+    to ``slots`` queued jobs are admitted together as one
+    ``repro.gson.FleetSession`` — a single compiled program stepping
+    every job's network at once (same-shaped specs share a cohort;
+    mixed shapes compile one program per cohort). Each tick advances
+    the whole wave by ``slice_iters`` iterations per network; jobs that
+    finish early freeze in place (the batch shape stays static) until
+    the wave drains, then the next wave refills the slots — exactly the
+    LM engine's wave pattern, applied to whole networks.
+
+    Jobs are declared as ``RunSpec``s. Variants without a batched step
+    program (the sequential references "single"/"indexed") are served
+    on the legacy path: one budgeted ``Session`` per slot, time-sliced
+    alongside the fleet wave.
     """
 
     def __init__(self, slots: int = 4, slice_iters: int = 50):
-        self.slots: list[ReconstructionJob | None] = [None] * slots
+        self.slots = slots
         self.slice_iters = slice_iters
         self.queue: list[ReconstructionJob] = []
         self.finished: list[ReconstructionJob] = []
         self.ticks = 0
         self._next_jid = 0
+        self._wave: list[ReconstructionJob] = []      # fleet-backed jobs
+        self._fleet = None                            # FleetSession
+        self._solo: list[ReconstructionJob] = []      # legacy Session jobs
 
     def submit(self, spec, seed: int = 0) -> ReconstructionJob:
         job = ReconstructionJob(self._next_jid, spec, seed)
@@ -202,33 +212,68 @@ class ReconstructionServer:
         self.queue.append(job)
         return job
 
-    def _admit(self):
-        from repro.gson import Session
-        for i, slot in enumerate(self.slots):
-            if slot is not None or not self.queue:
-                continue
-            job = self.queue.pop(0)
-            job.session = Session(job.spec, seed=job.seed,
-                                  on_history=job.history.append)
-            self.slots[i] = job
+    @staticmethod
+    def _fleet_capable(spec) -> bool:
+        from repro.gson import resolve_variant
+        return getattr(resolve_variant(spec.variant), "fleet_capable",
+                       False)
+
+    def _admit_wave(self):
+        """Refill the slots from the queue: one FleetSession for every
+        fleet-capable job in the wave, legacy Sessions for the rest."""
+        from repro.gson import FleetSession, FleetSpec, Session
+        wave: list[ReconstructionJob] = []
+        while self.queue and len(wave) < self.slots:
+            wave.append(self.queue.pop(0))
+        if not wave:
+            return
+        fleet_jobs = [j for j in wave if self._fleet_capable(j.spec)]
+        self._solo = [j for j in wave if j not in fleet_jobs]
+        self._wave = fleet_jobs
+        if fleet_jobs:
+            fspec = FleetSpec(tuple(j.spec for j in fleet_jobs),
+                              tuple(j.seed for j in fleet_jobs))
+
+            def route(row, jobs=fleet_jobs):
+                jobs[row["network"]].history.append(row)
+
+            self._fleet = FleetSession(fspec, on_history=route)
+            for j in fleet_jobs:
+                j.session = self._fleet
+        for j in self._solo:
+            j.session = Session(j.spec, seed=j.seed,
+                                on_history=j.history.append)
+
+    def _wave_live(self) -> bool:
+        return any(not j.done for j in self._wave + self._solo)
 
     def step(self):
-        """One tick: admit queued jobs, give every live job one slice."""
-        self._admit()
+        """One tick: admit a wave when idle, else advance every slot."""
+        if not self._wave_live():
+            self._wave, self._solo, self._fleet = [], [], None
+            if self.queue:
+                self._admit_wave()
+            if not self._wave_live():
+                return
         self.ticks += 1
-        for i, job in enumerate(self.slots):
-            if job is None:
+        if self._fleet is not None:
+            self._fleet.run(budget=self.slice_iters)
+            for i, job in enumerate(self._wave):
+                if not job.done and not self._fleet.active_network(i):
+                    _, job.stats = self._fleet.result(i)
+                    job.done = True
+                    self.finished.append(job)
+        for job in self._solo:
+            if job.done:
                 continue
             job.session.run(budget=self.slice_iters)
             if not job.session.active:
                 _, job.stats = job.session.result()
                 job.done = True
                 self.finished.append(job)
-                self.slots[i] = None
 
     def run(self, max_ticks: int = 10_000) -> list[ReconstructionJob]:
-        while (self.queue or any(
-                j is not None for j in self.slots)) and max_ticks > 0:
+        while (self.queue or self._wave_live()) and max_ticks > 0:
             self.step()
             max_ticks -= 1
         return self.finished

@@ -120,13 +120,20 @@ def test_eight_sampler_on_implicit_surface():
 
 def test_multi_uses_fewer_effective_signals_than_single():
     """Paper Sec. 3.2 in miniature: compare effective signals needed to
-    reach the same quantization error on the sphere."""
+    reach the same quantization error on the sphere.
+
+    insertion_threshold 0.25 keeps the GWR growth plateau comfortably
+    below the QE target for any signal stream: since the multi variant
+    runs the fleet core's masked signal buffer (one program for session
+    and fleet), its stream differs from the legacy exact-m host
+    sampling, and a threshold whose plateau sits AT the target would
+    make convergence a coin flip on stream luck."""
     target_qe = 0.02
     probes = make_sampler("sphere")(jax.random.key(99), 512)
 
     def run(variant):
         cfg = EngineConfig(
-            params=GSONParams(model="gwr", insertion_threshold=0.3),
+            params=GSONParams(model="gwr", insertion_threshold=0.25),
             capacity=512, max_deg=16, variant=variant, chunk=64,
             max_iterations=4000 if variant == "single" else 400,
             check_every=5, qe_threshold=target_qe, n_probe=512)
