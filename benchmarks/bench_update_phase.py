@@ -1,44 +1,103 @@
-"""Beyond-paper: batched Update phase cost vs m (paper Sec. 4 future work).
+"""Update-phase cost: scatter reference vs the kernel formulation.
 
-The paper parallelizes only Find Winners and reports Update becoming the
-new bottleneck on GPU (Fig. 8). Our Update IS batched (vectorized
-scatter algebra with deterministic collision resolution), so we measure
-its scaling with m: near-flat per-iteration cost until the scatter
-tables dominate, i.e. the phase the paper left sequential parallelizes
-with the same data-partitioning recipe.
+The paper parallelizes only Find Winners and reports Update becoming
+the new bottleneck on GPU (Fig. 8); parallelizing Update is its named
+future work, and ``repro.kernels.update_phase`` is that step. This
+bench isolates the dense Update phase (winner lock -> adaptation ->
+habituation -> error -> edge aging, Find Winners held fixed outside
+the timer) and times three implementations per iteration:
+
+  * ``t_ref_us``    — ``update_phase_reference``: the scatter-based
+    engine path (``.at[].add/.min`` with deterministic collisions);
+  * ``t_dense_us``  — ``update_phase_dense``: the kernel's one-hot
+    contraction algorithm as UNTILED plain XLA (materializes the full
+    (m, K, capacity) one-hot — the naive dense baseline);
+  * ``t_pallas_us`` — ``update_phase_op``: the tiled Pallas suite. In
+    interpret mode the grid loop lowers through XLA, so this measures
+    the tiled algorithm itself, minus the MXU.
+
+Two recorded speedups: ``speedup_kernel`` (reference/pallas — the
+per-iteration improvement of the kernel path over the reference path)
+and ``speedup_tiling`` (dense/pallas — what VMEM-sized tiles buy over
+the naive dense formulation, 2-8x across the sweep).
+
+The sweep follows the paper's m-schedule regime: m = 2 * units (the
+power-of-two schedule), so rows are "one multi-signal iteration at
+network size N". At the production pool size (capacity 768, where the
+multi-signal variant wins biggest — see §Perf) the tiled suite runs at
+parity-to-modest-wins vs the scatter reference ON THIS CPU
+(speedup_kernel ~0.8-1.2x across rows, wobbling with contention; the
+cleaner end-to-end measurement is the 800-iteration fused sphere
+reconstruction, ~1.25x faster with pallas-update — EXPERIMENTS.md
+§Update-phase). Past the crossover (capacity 2048 rows) the one-hot
+contraction's O(m*C) work loses to the scatter's O(m*K) without an MXU
+to absorb it — the TPU-side projection is the §Update-phase roofline
+argument in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.gson.multi import multi_signal_step_impl
+from repro.core.gson.multi import (find_winners_reference,
+                                   update_phase_reference)
 from repro.core.gson.sampling import make_sampler
 from repro.core.gson.state import GSONParams, init_state
+from repro.kernels.update_phase.ops import update_phase_op
+from repro.kernels.update_phase.ref import update_phase_dense
 from repro.utils.timing import timed
 
-COLS = ["m", "t_step_us", "t_per_signal_us"]
+COLS = ["units", "capacity", "m", "t_ref_us", "t_dense_us",
+        "t_pallas_us", "speedup_kernel", "speedup_tiling"]
 
 
-def run(ms=(64, 256, 1024, 4096, 8192), capacity=8192):
+def bench_at_size(n_units: int, m: int, capacity: int = 768,
+                  n: int = 10):
     p = GSONParams(model="soam")
     sampler = make_sampler("sphere")
     st = init_state(jax.random.key(0), capacity=capacity, dim=3,
                     max_deg=16,
-                    seed_points=sampler(jax.random.key(1), 1024))
-    import jax.numpy as jnp
+                    seed_points=sampler(jax.random.key(1), n_units))
     st = st.replace(active=jnp.zeros((capacity,), bool)
-                    .at[:1024].set(True),
-                    n_active=jnp.asarray(1024, jnp.int32))
-    rows = []
-    for m in ms:
-        signals = sampler(jax.random.key(2), m)
-        # undonated jit: the benchmark re-feeds the same state every call
-        step = jax.jit(lambda s: multi_signal_step_impl(
-            s, signals, p, refresh_states=False))
-        _, t = timed(step, st, n=5, warmup=1)
-        rows.append({"m": m, "t_step_us": t * 1e6,
-                     "t_per_signal_us": t * 1e6 / m})
+                    .at[:n_units].set(True),
+                    n_active=jnp.asarray(n_units, jnp.int32))
+    signals = sampler(jax.random.key(2), m)
+    wid, sid, d2b, _ = find_winners_reference(signals, st.w, st.active)
+    k_lock = jax.random.key(3)
+
+    # undonated jits: the benchmark re-feeds the same state every call
+    def run_impl(impl, s):
+        return impl(s, signals, wid, sid, d2b, k_lock, p)
+
+    t = {}
+    for name, impl in (
+            ("ref", update_phase_reference),
+            ("dense", update_phase_dense),
+            ("pallas", functools.partial(update_phase_op,
+                                         interpret=True))):
+        fn = jax.jit(functools.partial(run_impl, impl))
+        _, dt = timed(fn, st, n=n, warmup=2)
+        t[name] = dt
+    return {
+        "units": n_units, "capacity": capacity, "m": m,
+        "t_ref_us": t["ref"] * 1e6,
+        "t_dense_us": t["dense"] * 1e6,
+        "t_pallas_us": t["pallas"] * 1e6,
+        "speedup_kernel": t["ref"] / t["pallas"],
+        "speedup_tiling": t["dense"] / t["pallas"],
+    }
+
+
+def run():
+    # production pool (the fused superstep's regime), then two
+    # past-the-crossover rows at a 2048 pool for the scaling story
+    rows = [bench_at_size(u, min(2 * u, 8192), capacity=768)
+            for u in (32, 64, 128, 256, 384)]
+    rows += [bench_at_size(u, min(2 * u, 8192), capacity=2048)
+             for u in (1024, 2048)]
     emit("bench_update_phase", rows, COLS)
     return rows
 

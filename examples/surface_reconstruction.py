@@ -69,9 +69,11 @@ def export_obj(state, path: str):
 
 
 def build_spec(args) -> gson.RunSpec:
-    variant, backend = args.variant, "reference"
+    variant, backend = args.variant, args.backend
     if variant == "kernel":     # legacy alias: multi + Pallas backend
-        variant, backend = "multi", "pallas"
+        variant = "multi"
+        if backend == "reference":      # only the untouched default
+            backend = "pallas"
     vcfg = None
     if variant == "multi-fused":
         vcfg = gson.FusedConfig(
@@ -154,6 +156,10 @@ def main(argv=None):
                          "mesh per network")
     ap.add_argument("--variant", default="multi",
                     choices=sorted(gson.VARIANTS.names()) + ["kernel"])
+    ap.add_argument("--backend", default="reference",
+                    choices=sorted(gson.BACKENDS.names()),
+                    help="per-phase device kernels (Find Winners + "
+                         "dense Update) — see docs/api.md")
     ap.add_argument("--superstep", type=int, default=64,
                     help="iterations per device call (multi-fused)")
     ap.add_argument("--iters", type=int, default=800)

@@ -1,9 +1,9 @@
 from repro.core.gson.engine import EngineConfig, GSONEngine, RunStats
-from repro.core.gson.multi import (find_winners_reference,
+from repro.core.gson.multi import (UpdateOut, find_winners_reference,
                                    multi_signal_step,
                                    multi_signal_step_impl,
                                    refresh_topology, soam_converged,
-                                   winner_lock)
+                                   update_phase_reference, winner_lock)
 from repro.core.gson.single import single_signal_scan
 from repro.core.gson.state import GSONParams, NetworkState, init_state
 from repro.core.gson.superstep import (SuperstepConfig, SuperstepResult,

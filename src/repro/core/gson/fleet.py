@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gson import metrics
-from repro.core.gson.multi import (FindWinnersFn, multi_signal_step_impl,
+from repro.core.gson.multi import (FindWinnersFn, UpdatePhaseFn,
+                                   multi_signal_step_impl,
                                    refresh_topology, soam_converged)
 from repro.core.gson.state import GSONParams, NetworkState, init_fleet
 from repro.core.gson.superstep import SuperstepConfig, device_m_schedule
@@ -223,6 +224,7 @@ def fleet_iterate_impl(
     params: GSONParams,
     cfg: SuperstepConfig,
     find_winners: FindWinnersFn | None = None,
+    update_phase: UpdatePhaseFn | None = None,
 ) -> FleetState:
     """One masked multi-signal iteration for every network in ``mask``.
 
@@ -241,7 +243,8 @@ def fleet_iterate_impl(
         smask = jnp.arange(cfg.max_parallel, dtype=jnp.int32) < m_t
         return multi_signal_step_impl(
             net, sig, params, refresh_states=False,
-            find_winners=find_winners, signal_mask=smask)
+            find_winners=find_winners, signal_mask=smask,
+            update_phase=update_phase)
 
     nets = jax.vmap(one)(fstate.nets, signals)
 
@@ -301,6 +304,7 @@ def run_fleet_superstep_impl(
     params: GSONParams,
     cfg: SuperstepConfig,
     find_winners: FindWinnersFn | None = None,
+    update_phase: UpdatePhaseFn | None = None,
 ):
     """Up to ``max_steps[i]`` fused iterations per network, one call.
 
@@ -328,7 +332,8 @@ def run_fleet_superstep_impl(
         running = ~fs.converged & (steps < max_steps)
         fs = fleet_iterate_impl(fs, running, sampler=sampler,
                                 params=params, cfg=cfg,
-                                find_winners=find_winners)
+                                find_winners=find_winners,
+                                update_phase=update_phase)
         steps = jnp.where(running, steps + 1, steps)
         # cadence on the post-increment global counter (continuous
         # across superstep calls), like superstep._body
@@ -357,7 +362,8 @@ def run_fleet_superstep_impl(
 # so XLA updates them in place across calls.
 fleet_iterate = jax.jit(
     fleet_iterate_impl,
-    static_argnames=("sampler", "params", "cfg", "find_winners"),
+    static_argnames=("sampler", "params", "cfg", "find_winners",
+                     "update_phase"),
     donate_argnames=("fstate",))
 
 fleet_check = jax.jit(
@@ -367,5 +373,6 @@ fleet_check = jax.jit(
 
 run_fleet_superstep = jax.jit(
     run_fleet_superstep_impl,
-    static_argnames=("sampler", "params", "cfg", "find_winners"),
+    static_argnames=("sampler", "params", "cfg", "find_winners",
+                     "update_phase"),
     donate_argnames=("fstate",))

@@ -12,6 +12,18 @@ One call processes m >> 1 signals at once:
      batched while preserving the winner-lock semantics is this repo's
      beyond-paper extension — see EXPERIMENTS.md §Perf).
 
+Both device-heavy phases are pluggable. ``find_winners`` swaps the
+top-2 search (``FindWinnersFn``); ``update_phase`` swaps the *dense*
+half of the Update phase (``UpdatePhaseFn``): winner lock, weight
+pulls, habituation, error accumulation and edge aging — everything the
+paper's Sec. 2.5 profile shows dominating once Find Winners is
+parallelized. :func:`update_phase_reference` is the scatter-based
+default; ``repro.kernels.update_phase`` provides the tiled Pallas
+suite, selected per-``RunSpec`` through the BACKENDS registry. The
+discrete *structural* tail (unit insertion, edge insertion/expiry,
+pruning) stays in the shared jnp code below — it is O(capacity) and
+branch-heavy, not a bandwidth problem.
+
 Supports the three published models: GNG (Fritzke 95), GWR (Marsland 02)
 and SOAM (Piastra 12). The single-signal reference algorithm is this step
 at m=1 (see single.py), which makes the coherence between variants
@@ -20,7 +32,7 @@ directly testable.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +44,29 @@ _BIG32 = jnp.iinfo(jnp.int32).max
 
 FindWinnersFn = Callable[[jax.Array, jax.Array, jax.Array],
                          tuple[jax.Array, jax.Array, jax.Array, jax.Array]]
+
+
+class UpdateOut(NamedTuple):
+    """Result of the dense Update phase (see ``UpdatePhaseFn``).
+
+    Per-signal decisions feed the structural tail; per-unit arrays are
+    the adapted network fields.
+    """
+
+    selected: jax.Array   # (m,) bool — winner-lock survivors
+    adapt: jax.Array      # (m,) bool — survivors that adapt (vs insert)
+    ins: jax.Array        # (m,) bool — GWR/SOAM insertion triggers
+    w: jax.Array          # (C, dim) f32 adapted reference vectors
+    firing: jax.Array     # (C,) f32 habituation counters
+    error: jax.Array      # (C,) f32 GNG error accumulator
+    age: jax.Array        # (C, K) f32 aged (and winner-edge-refreshed) ages
+
+
+# The dense Update phase: (state, signals, wid, sid, d2b, k_lock,
+# params, signal_mask) -> UpdateOut. Implementations must preserve the
+# winner-lock semantics (one survivor per distinct winner, uniformly
+# random among colliders under k_lock) — see update_phase_reference.
+UpdatePhaseFn = Callable[..., UpdateOut]
 
 
 def find_winners_reference(signals: jax.Array, w: jax.Array,
@@ -110,80 +145,108 @@ def refresh_topology(state: NetworkState, params: GSONParams) -> NetworkState:
                          inconsistent_for=inconsistent)
 
 
-def multi_signal_step_impl(
+def stable_units(state: NetworkState, params: GSONParams) -> jax.Array:
+    """(C,) bool — units frozen in place by SOAM crystallization.
+
+    SOAM: topologically stable units (disk/patch) stop moving so the
+    rest of the mesh can settle (Piastra 12); their mutual edges are
+    also protected from aging (EXPERIMENTS.md §H-soam-2).
+    """
+    if params.model == "soam" and params.freeze_stable:
+        return (state.topo_state >= DISK) & (state.topo_state != SINGULAR)
+    return jnp.zeros((state.capacity,), bool)
+
+
+def update_phase_inputs(state: NetworkState, wid: jax.Array,
+                        d2b: jax.Array, selected: jax.Array,
+                        params: GSONParams):
+    """Shared per-signal prologue of the dense Update phase.
+
+    From the lock survivors, derive every per-signal decision and
+    coefficient the adaptation needs: insertion triggers, adapt mask,
+    winner/neighbor pull scales and habituation decrements, and the
+    winners' neighbor rows. One definition serves both
+    :func:`update_phase_reference` and the Pallas wrapper
+    (``kernels.update_phase.ops``), so rule changes cannot silently
+    diverge between backends (the dense oracle in
+    ``kernels.update_phase.ref`` keeps its own copy by design).
+
+    Returns ``(ins, adapt, scale_b, dec_b, h_b, nb, nb_valid, scale_n,
+    dec_n)`` with ``scale_n``/``dec_n`` zeroed on invalid slots and
+    stable units' scales zeroed (SOAM freeze).
+    """
+    C = state.capacity
+    is_gng = params.model == "gng"
+    wc = jnp.clip(wid, 0, C - 1)
+    if is_gng:
+        ins = jnp.zeros(wid.shape, bool)
+    else:
+        ins = (selected
+               & (jnp.sqrt(d2b) > state.threshold[wc])
+               & (state.firing[wc] < params.firing_threshold))
+    adapt = selected if is_gng else (selected & ~ins)
+
+    stable_u = stable_units(state, params)
+    h_b = state.firing[wc]
+    scale_b = params.eps_b * (jnp.ones_like(h_b) if is_gng else h_b)
+    scale_b = jnp.where(stable_u[wc], 0.0, scale_b)
+    dec_b = (jnp.zeros_like(h_b) if is_gng
+             else params.tau_b * (h_b - params.h_min))
+
+    nb = state.nbr[wc]                                       # (m, K)
+    nb_valid = (nb >= 0) & adapt[:, None]
+    nb_safe = jnp.clip(nb, 0, C - 1)
+    h_n = state.firing[nb_safe]
+    scale_n = params.eps_n * (jnp.ones_like(h_n) if is_gng else h_n)
+    scale_n = jnp.where(stable_u[nb_safe], 0.0, scale_n)
+    scale_n = jnp.where(nb_valid, scale_n, 0.0)
+    dec_n = (jnp.zeros_like(h_n) if is_gng
+             else jnp.where(nb_valid,
+                            params.tau_n * (h_n - params.h_min), 0.0))
+    return ins, adapt, scale_b, dec_b, h_b, nb, nb_valid, scale_n, dec_n
+
+
+def update_phase_reference(
     state: NetworkState,
     signals: jax.Array,
+    wid: jax.Array,
+    sid: jax.Array,
+    d2b: jax.Array,
+    k_lock: jax.Array,
     params: GSONParams,
-    refresh_states: bool = True,
-    find_winners: FindWinnersFn | None = None,
     signal_mask: jax.Array | None = None,
-) -> NetworkState:
-    """One multi-signal iteration. ``signals``: (m, dim) float32.
+) -> UpdateOut:
+    """The dense Update phase, scatter-based (the reference path).
 
-    Un-jitted implementation — compose freely inside scans / shard_map.
-    ``multi_signal_step`` below is the jitted entry point.
-
-    ``signal_mask``: optional (m,) bool. Rows with mask False are inert:
-    they never win the lock, never adapt/insert, and are not counted as
-    consumed signals. This is how the fused superstep keeps a single jit
-    signature while the paper's m-schedule varies per iteration — the
-    signal buffer has a static ``max_parallel`` rows and the mask selects
-    the first ``m_t`` of them. A masked call with k valid rows is
-    equivalent to an unmasked call with those k signals (up to the
-    random priorities used for collision resolution).
+    Everything between Find Winners and the structural tail of the
+    paper's Update (Sec. 2.2 steps 2-6): winner lock, insertion
+    decision, winner + neighbor weight pulls, habituation, GNG error
+    accumulation, edge aging on winner rows, and the winner-second
+    edge-age refresh. All per-unit writes are ``.at[].add/.min``
+    scatters with deterministic collision resolution — the formulation
+    ``repro.kernels.update_phase`` re-expresses as tiled one-hot
+    matmul kernels (same contract, documented float tolerance).
     """
-    if find_winners is None:
-        find_winners = find_winners_reference
     C, K = state.capacity, state.max_deg
-    m = signals.shape[0]
-    m_eff = m if signal_mask is None else (
-        jnp.sum(signal_mask).astype(jnp.int32))
     is_gng = params.model == "gng"
-    is_soam = params.model == "soam"
-
-    rng, k_lock = jax.random.split(state.rng)
-
-    # ---- 1. Find Winners -------------------------------------------------
-    wid, sid, d2b, _ = find_winners(signals, state.w, state.active)
 
     # ---- 2. winner lock --------------------------------------------------
     selected, prio = winner_lock(k_lock, wid, C, signal_mask)
-    n_sel = jnp.sum(selected).astype(jnp.int32)
-    dist_b = jnp.sqrt(d2b)
 
     sel_w = jnp.where(selected, wid, C)          # sentinel -> scatter drop
 
-    # ---- 3a. insertion decision (GWR/SOAM: distance + habituation) -------
-    if is_gng:
-        ins = jnp.zeros((m,), bool)
-    else:
-        ins = (selected
-               & (dist_b > state.threshold[jnp.clip(wid, 0, C - 1)])
-               & (state.firing[jnp.clip(wid, 0, C - 1)]
-                  < params.firing_threshold))
-    adapt = selected if is_gng else (selected & ~ins)
+    # ---- 3a. per-signal decisions + coefficients (shared prologue) -------
+    (ins, adapt, scale_b, dec_b, h_b, nb, nb_valid, scale_n,
+     dec_n) = update_phase_inputs(state, wid, d2b, selected, params)
 
     # ---- 3b. adaptation of winner + neighbors ----------------------------
-    # SOAM: topologically stable units (disk/patch) are frozen in place so
-    # the rest of the mesh can settle (Piastra 12).
     w = state.w
     firing = state.firing
-    if is_soam and params.freeze_stable:
-        stable_u = (state.topo_state >= DISK) & (state.topo_state != SINGULAR)
-    else:
-        stable_u = jnp.zeros((C,), bool)
-    h_b = firing[jnp.clip(wid, 0, C - 1)]
-    scale_b = params.eps_b * (jnp.ones_like(h_b) if is_gng else h_b)
-    scale_b = jnp.where(stable_u[jnp.clip(wid, 0, C - 1)], 0.0, scale_b)
+    stable_u = stable_units(state, params)
     delta_b = scale_b[:, None] * (signals - w[jnp.clip(wid, 0, C - 1)])
     w = w.at[jnp.where(adapt, wid, C)].add(delta_b, mode="drop")
 
-    nb = state.nbr[jnp.clip(wid, 0, C - 1)]                     # (m, K)
-    nb_valid = (nb >= 0) & adapt[:, None]
     nb_safe = jnp.clip(nb, 0, C - 1)
-    h_n = firing[nb_safe]
-    scale_n = params.eps_n * (jnp.ones_like(h_n) if is_gng else h_n)
-    scale_n = jnp.where(stable_u[nb_safe], 0.0, scale_n)
     delta_n = scale_n[..., None] * (signals[:, None, :] - w[nb_safe])
     delta_n = jnp.where(nb_valid[..., None], delta_n, 0.0)
     if params.neighbor_collision == "sum":
@@ -199,10 +262,7 @@ def multi_signal_step_impl(
 
     # ---- 3c. habituation (GWR/SOAM) --------------------------------------
     if not is_gng:
-        dec_b = params.tau_b * (h_b - params.h_min)
         firing = firing.at[jnp.where(adapt, wid, C)].add(-dec_b, mode="drop")
-        dec_n = params.tau_n * (h_n - params.h_min)
-        dec_n = jnp.where(nb_valid, dec_n, 0.0)
         firing = firing.at[jnp.where(nb_valid, nb, C)].add(
             -dec_n, mode="drop")
         firing = jnp.clip(firing, params.h_min, 1.0)
@@ -216,6 +276,67 @@ def multi_signal_step_impl(
     # stable-stable edges are protected from aging (SOAM crystallization)
     age = topo.age_incident_edges(state.nbr, state.age, wid, selected,
                                   protect=stable_u)
+    # refresh the winner-second edge where it already exists (the
+    # paper's "set age(b, s) = 0" Update step). The structural tail's
+    # insert_edges re-resets the same slots (idempotent) while also
+    # inserting missing (b, s) edges — keeping it there preserves the
+    # historical bit-exact trajectory; doing it HERE as well lets a
+    # fused kernel own the whole age array in one pass.
+    age = topo.reset_edge_ages(state.nbr, age, wid, sid, adapt)
+
+    return UpdateOut(selected=selected, adapt=adapt, ins=ins,
+                     w=w, firing=firing, error=error, age=age)
+
+
+def multi_signal_step_impl(
+    state: NetworkState,
+    signals: jax.Array,
+    params: GSONParams,
+    refresh_states: bool = True,
+    find_winners: FindWinnersFn | None = None,
+    signal_mask: jax.Array | None = None,
+    update_phase: UpdatePhaseFn | None = None,
+) -> NetworkState:
+    """One multi-signal iteration. ``signals``: (m, dim) float32.
+
+    Un-jitted implementation — compose freely inside scans / shard_map.
+    ``multi_signal_step`` below is the jitted entry point.
+
+    ``signal_mask``: optional (m,) bool. Rows with mask False are inert:
+    they never win the lock, never adapt/insert, and are not counted as
+    consumed signals. This is how the fused superstep keeps a single jit
+    signature while the paper's m-schedule varies per iteration — the
+    signal buffer has a static ``max_parallel`` rows and the mask selects
+    the first ``m_t`` of them. A masked call with k valid rows is
+    equivalent to an unmasked call with those k signals (up to the
+    random priorities used for collision resolution).
+
+    ``update_phase``: optional ``UpdatePhaseFn`` replacing the dense
+    Update phase (``update_phase_reference``) — the second pluggable
+    backend axis, e.g. ``repro.kernels.update_phase``'s Pallas suite.
+    """
+    if find_winners is None:
+        find_winners = find_winners_reference
+    if update_phase is None:
+        update_phase = update_phase_reference
+    C, K = state.capacity, state.max_deg
+    m = signals.shape[0]
+    m_eff = m if signal_mask is None else (
+        jnp.sum(signal_mask).astype(jnp.int32))
+    is_gng = params.model == "gng"
+    is_soam = params.model == "soam"
+
+    rng, k_lock = jax.random.split(state.rng)
+
+    # ---- 1. Find Winners -------------------------------------------------
+    wid, sid, d2b, _ = find_winners(signals, state.w, state.active)
+
+    # ---- 2-3e. dense Update phase (pluggable backend) --------------------
+    up = update_phase(state, signals, wid, sid, d2b, k_lock, params,
+                      signal_mask)
+    selected, adapt, ins = up.selected, up.adapt, up.ins
+    w, firing, error, age = up.w, up.firing, up.error, up.age
+    n_sel = jnp.sum(selected).astype(jnp.int32)
     nbr = state.nbr
 
     # ---- 3f. GWR/SOAM unit insertion -------------------------------------
@@ -331,7 +452,8 @@ def multi_signal_step_impl(
 # under a caller-owned jit), as the benchmarks do.
 multi_signal_step = jax.jit(
     multi_signal_step_impl,
-    static_argnames=("params", "refresh_states", "find_winners"),
+    static_argnames=("params", "refresh_states", "find_winners",
+                     "update_phase"),
     donate_argnames=("state",))
 
 

@@ -42,7 +42,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gson import metrics
-from repro.core.gson.multi import (FindWinnersFn, multi_signal_step_impl,
+from repro.core.gson.multi import (FindWinnersFn, UpdatePhaseFn,
+                                   multi_signal_step_impl,
                                    refresh_topology, soam_converged)
 from repro.core.gson.state import GSONParams, NetworkState
 
@@ -113,7 +114,8 @@ def device_m_schedule(n_active: jax.Array, cfg: SuperstepConfig) -> jax.Array:
 
 def _iterate(state: NetworkState, k_sig: jax.Array, it: jax.Array, *,
              sampler, params: GSONParams, cfg: SuperstepConfig,
-             find_winners: FindWinnersFn | None) -> NetworkState:
+             find_winners: FindWinnersFn | None,
+             update_phase: UpdatePhaseFn | None = None) -> NetworkState:
     """One fused iteration: sample -> masked multi-signal step -> cond
     topology refresh. ``it`` is the global iteration counter (so the
     refresh cadence is continuous across superstep calls)."""
@@ -122,7 +124,8 @@ def _iterate(state: NetworkState, k_sig: jax.Array, it: jax.Array, *,
     mask = jnp.arange(cfg.max_parallel, dtype=jnp.int32) < m_t
     state = multi_signal_step_impl(
         state, signals, params, refresh_states=False,
-        find_winners=find_winners, signal_mask=mask)
+        find_winners=find_winners, signal_mask=mask,
+        update_phase=update_phase)
     if params.model == "soam":
         state = jax.lax.cond(
             it % cfg.refresh_every == 0,
@@ -145,11 +148,13 @@ def _convergence_check(state: NetworkState, probes: jax.Array, *,
     return state, done, qe
 
 
-def _body(carry, probes, it0, *, sampler, params, cfg, find_winners):
+def _body(carry, probes, it0, *, sampler, params, cfg, find_winners,
+          update_phase=None):
     state, rng, it, done, qe = carry
     rng, k_sig = jax.random.split(rng)
     state = _iterate(state, k_sig, it0 + it, sampler=sampler, params=params,
-                     cfg=cfg, find_winners=find_winners)
+                     cfg=cfg, find_winners=find_winners,
+                     update_phase=update_phase)
     it = it + 1
 
     def check(args):
@@ -170,7 +175,8 @@ def _init_carry(state: NetworkState, rng: jax.Array):
 
 
 @partial(jax.jit,
-         static_argnames=("sampler", "params", "cfg", "find_winners"),
+         static_argnames=("sampler", "params", "cfg", "find_winners",
+                          "update_phase"),
          donate_argnames=("state",))
 def run_superstep(
     state: NetworkState,
@@ -182,6 +188,7 @@ def run_superstep(
     params: GSONParams,
     cfg: SuperstepConfig,
     find_winners: FindWinnersFn | None = None,
+    update_phase: UpdatePhaseFn | None = None,
 ) -> SuperstepResult:
     """Execute up to ``cfg.length`` fused iterations in ONE device call.
 
@@ -200,7 +207,8 @@ def run_superstep(
                          "cfg.resolve(capacity, params) first")
     it0 = jnp.asarray(it0, jnp.int32)
     body = partial(_body, probes=probes, it0=it0, sampler=sampler,
-                   params=params, cfg=cfg, find_winners=find_winners)
+                   params=params, cfg=cfg, find_winners=find_winners,
+                   update_phase=update_phase)
     carry = _init_carry(state, rng)
 
     if cfg.early_exit:

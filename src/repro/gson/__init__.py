@@ -1,6 +1,12 @@
 """repro.gson — the composable public API for growing self-organizing
 network experiments.
 
+The axes mirror the paper's experimental matrix (Sec. 3): its
+parallelization *variants* (single / indexed / multi, Sec. 2.2-2.5,
+plus this repo's fused superstep), its three *models* (GNG / GWR /
+SOAM), its benchmark signal distributions, and the per-phase device
+*backends* for Find Winners and the dense Update (Sec. 2.5 profile).
+
 Assemble a run from names (or objects) along four registered axes, then
 drive it as a streaming, resumable session:
 
@@ -45,7 +51,9 @@ i is bit-identical to ``Session(spec_i, seed=seed_i)``:
 Registries: ``VARIANTS`` (single / indexed / multi / multi-fused),
 ``MODELS`` (gng / gwr / soam), ``SAMPLERS`` (benchmark surfaces; any
 ``repro.data.pointclouds`` stream or ``(rng, n) -> points`` callable is
-accepted directly), ``BACKENDS`` (reference / pallas). Registering a new
+accepted directly), ``BACKENDS`` (reference / pallas / pallas-update /
+pallas-full — per-phase device kernels for Find Winners and the dense
+Update, see ``gson.Backend``). Registering a new
 entry makes it visible everywhere a registry is enumerated — e.g.
 ``benchmarks/run.py``'s variant matrix — and ``register`` doubles as a
 decorator: ``@SAMPLERS.register("my-surface")``.
@@ -58,8 +66,9 @@ from repro.core.gson.state import GSONParams, NetworkState
 from repro.core.gson.superstep import SuperstepConfig
 from repro.gson.fleet import FleetSession, FleetSpec, run_fleet
 from repro.gson.registry import (BACKENDS, MODELS, SAMPLERS, VARIANTS,
-                                 ModelDef, Registry, resolve_backend,
-                                 resolve_model, resolve_sampler)
+                                 Backend, ModelDef, Registry,
+                                 resolve_backend, resolve_model,
+                                 resolve_sampler)
 from repro.gson.session import RunStats, Session, run
 from repro.gson.spec import RunSpec, resolve, resolve_variant
 from repro.gson.variants import (DEFAULT_BBOX, FusedConfig, IndexedConfig,
@@ -69,7 +78,7 @@ from repro.gson.variants import (DEFAULT_BBOX, FusedConfig, IndexedConfig,
 
 __all__ = [
     "BACKENDS", "MODELS", "SAMPLERS", "VARIANTS",
-    "DEFAULT_BBOX", "FleetSession", "FleetSpec", "FleetState",
+    "Backend", "DEFAULT_BBOX", "FleetSession", "FleetSpec", "FleetState",
     "FusedConfig", "GSONParams", "IndexedConfig",
     "ModelDef", "MultiConfig", "NetworkState", "Registry", "RunSpec",
     "RunStats", "Runtime", "Session", "SingleConfig", "StepResult",

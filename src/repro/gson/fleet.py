@@ -99,6 +99,7 @@ def _cohort_key(spec: RunSpec, strategy, rt):
     per-network operands and deliberately NOT part of the key.
     """
     return (strategy.name, rt.params, rt.vcfg, rt.find_winners,
+            rt.update_phase,
             spec.capacity, spec.dim, spec.max_deg, spec.check_every,
             spec.qe_threshold, spec.n_probe)
 
@@ -117,6 +118,7 @@ class Cohort:
         self.spec = self.specs[0]          # shape-defining spec
         self.params = rt0.params
         self.find_winners = rt0.find_winners
+        self.update_phase = rt0.update_phase
         self.cfg = self.strategy.fleet_cfg(self.spec, rt0.params,
                                            rt0.vcfg)
         self.sampler = fleet_core.as_fleet_sampler(
@@ -180,7 +182,8 @@ class Cohort:
                 self.fstate, self.probes,
                 jnp.asarray(max_steps, jnp.int32),
                 sampler=self.sampler, params=self.params, cfg=self.cfg,
-                find_winners=self.find_winners)
+                find_winners=self.find_winners,
+                update_phase=self.update_phase)
             steps = np.asarray(steps).astype(np.int64)
             checked = act & (steps > 0)   # one row per superstep
             self.converged = np.asarray(self.fstate.converged).copy()
@@ -188,7 +191,8 @@ class Cohort:
             self.fstate = fleet_core.fleet_iterate(
                 self.fstate, jnp.asarray(act), sampler=self.sampler,
                 params=self.params, cfg=self.cfg,
-                find_winners=self.find_winners)
+                find_winners=self.find_winners,
+                update_phase=self.update_phase)
             steps = act.astype(np.int64)
             checked = act & ((self.iterations + steps)
                              % self.spec.check_every == 0)

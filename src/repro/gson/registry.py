@@ -8,8 +8,9 @@ Four orthogonal axes, mirroring the paper's experimental matrix:
   MODELS    — the growing-network rule set (GNG / GWR / SOAM)
   SAMPLERS  — the signal distribution P(xi) (benchmark surfaces +
               point-cloud streams from ``repro.data.pointclouds``)
-  BACKENDS  — the Find Winners implementation (pure-jnp reference,
-              Pallas MXU kernel)
+  BACKENDS  — device implementations of the step's two hot phases
+              (paper Sec. 2.5): Find Winners and the dense Update
+              phase (pure-jnp references, Pallas kernel suites)
 
 Every axis accepts either a registered name or a concrete object, so
 ``RunSpec(variant="multi", sampler="sphere")`` and
@@ -148,35 +149,80 @@ def resolve_sampler(sampler: str | Any):
 
 
 # ---------------------------------------------------------------------------
-# Find Winners backends. Entries are zero-arg factories; ``None`` from a
-# factory means "the variant's built-in default search".
+# Backends: the device implementations of the step's two hot phases.
+# Entries are zero-arg factories returning a :class:`Backend`; a ``None``
+# phase field means "the engine's pure-jnp reference for that phase".
 
-BACKENDS: Registry[Callable[[], Any]] = Registry("backend")
 
-BACKENDS.register("reference", lambda: find_winners_reference)
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One entry on the BACKENDS axis: per-phase device implementations.
+
+    The paper's profile (Sec. 2.5) has two hot phases — Find Winners
+    and Update — and each is independently pluggable:
+    ``find_winners`` is a ``FindWinnersFn`` (top-2 nearest-unit
+    search), ``update_phase`` an ``UpdatePhaseFn`` (winner lock +
+    dense adaptation; see ``repro.core.gson.multi``). The callables
+    are jit cache keys for every program that threads them (step /
+    superstep / fleet), so factories must return shared instances —
+    the registrations below memoize theirs.
+    """
+
+    name: str
+    find_winners: Any = None      # FindWinnersFn | None (= reference)
+    update_phase: Any = None      # UpdatePhaseFn | None (= reference)
+    description: str = ""
 
 
 @functools.lru_cache(maxsize=None)
-def _pallas_backend():
+def _pallas_find_winners():
     # one shared adapter instance: the fused superstep keys its jit cache
     # on the (identity-hashed) find_winners callable
     from repro.kernels.find_winners.ops import make_pallas_find_winners
     return make_pallas_find_winners()
 
 
-BACKENDS.register("pallas", _pallas_backend)
+@functools.lru_cache(maxsize=None)
+def _pallas_update_phase():
+    from repro.kernels.update_phase.ops import make_pallas_update_phase
+    return make_pallas_update_phase()
 
 
-def resolve_backend(backend: str | Any | None):
+BACKENDS: Registry[Callable[[], Backend]] = Registry("backend")
+
+BACKENDS.register("reference", lambda: Backend(
+    "reference", find_winners_reference, None,
+    "pure-jnp scatter reference for both phases"))
+BACKENDS.register("pallas", lambda: Backend(
+    "pallas", _pallas_find_winners(), None,
+    "Pallas MXU Find Winners kernel, reference Update"))
+BACKENDS.register("pallas-update", lambda: Backend(
+    "pallas-update", find_winners_reference, _pallas_update_phase(),
+    "reference Find Winners, Pallas Update-phase kernel suite"))
+BACKENDS.register("pallas-full", lambda: Backend(
+    "pallas-full", _pallas_find_winners(), _pallas_update_phase(),
+    "Pallas kernels for both hot phases"))
+
+
+def resolve_backend(backend: str | Any | None) -> Backend:
+    """Name / Backend / bare FindWinnersFn -> a :class:`Backend`.
+
+    A bare callable is accepted for compatibility with the original
+    Find-Winners-only axis (e.g. the shard_map searches in
+    ``core/gson/distributed.py``) and runs the reference Update phase.
+    ``None`` selects the reference for both phases.
+    """
     if backend is None:
-        return None
+        return Backend("reference")
+    if isinstance(backend, Backend):
+        return backend
     if isinstance(backend, str):
         return BACKENDS.get(backend)()
     if not callable(backend):
         raise TypeError(
-            f"backend must be a registered name or a FindWinnersFn; got "
-            f"{type(backend)!r}")
-    return backend
+            f"backend must be a registered name, a Backend, or a "
+            f"FindWinnersFn; got {type(backend)!r}")
+    return Backend("custom", find_winners=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,10 @@
 """Streaming, resumable run sessions.
 
+The paper runs fixed experiments to convergence (Sec. 3); a Session is
+that loop productionized — the same iterate-sample-converge schedule,
+but observable (streaming history rows), budgetable (pause/resume) and
+durable (checkpoint/restore), without changing a single emitted signal.
+
 ``Session`` replaces the monolithic ``GSONEngine.run`` with a driver
 that can stop and continue:
 

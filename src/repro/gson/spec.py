@@ -1,10 +1,17 @@
 """RunSpec: one declarative description of a GSON experiment.
 
+The paper's experiments are points in a (variant, model, surface)
+grid with shared hyper-parameters (Sec. 3.1); a RunSpec is one such
+point plus the execution knobs the paper fixes implicitly (pool
+geometry, run limits, backend).
+
 A spec names (or carries) one entry per registry axis — variant, model,
-sampler, Find Winners backend — plus the pool geometry and run limits
-shared by every variant. ``resolve(spec)`` turns it into the concrete
-strategy + Runtime the session drives; everything downstream (Session,
-GSONEngine shim, serving, benchmarks) goes through this one function.
+sampler, backend (the per-phase device kernels: Find Winners + dense
+Update, see ``repro.gson.registry.Backend``) — plus the pool geometry
+and run limits shared by every variant. ``resolve(spec)`` turns it into
+the concrete strategy + Runtime the session drives; everything
+downstream (Session, GSONEngine shim, serving, benchmarks) goes through
+this one function.
 """
 from __future__ import annotations
 
@@ -74,11 +81,13 @@ def resolve(spec: RunSpec) -> tuple[VariantStrategy, Runtime]:
         raise TypeError(
             f"variant {strategy.name!r} takes a "
             f"{strategy.config_cls.__name__}, got {type(vcfg).__name__}")
+    be = resolve_backend(spec.backend)
     rt = Runtime(
         spec=spec,
         params=resolve_model(spec.model),
         vcfg=vcfg,
         sampler=resolve_sampler(spec.sampler),
-        find_winners=resolve_backend(spec.backend),
+        find_winners=be.find_winners,
+        update_phase=be.update_phase,
     )
     return strategy, rt

@@ -1,7 +1,10 @@
 """Variant strategies: the pluggable parallelization axis.
 
 The paper's contribution is a *variant* of the growing-network loop —
-same rule set, different execution schedule. Each variant is a strategy
+same rule set, different execution schedule (Sec. 2.2: the multi-signal
+iteration; Sec. 3.1: the sequential and indexed baselines it is
+measured against; the fused superstep and fleet execution are this
+repo's beyond-paper extensions). Each variant is a strategy
 object with three hooks:
 
   prepare(rt)                  — resolve derived config once per run
@@ -107,6 +110,7 @@ class Runtime:
     vcfg: Any                     # the variant's typed config
     sampler: Any                  # f(rng, n) -> (n, dim) f32, pure JAX
     find_winners: Any             # FindWinnersFn | None
+    update_phase: Any = None      # UpdatePhaseFn | None
     probes: jax.Array | None = None
     scratch: dict = field(default_factory=dict)   # strategy-owned
 
@@ -272,7 +276,8 @@ class MultiVariant(_FleetBacked):
         fs = fleet_core.wrap_single(state, rng, it)
         fs = fleet_core.fleet_iterate(
             fs, one, sampler=rt.scratch["fleet_sampler"],
-            params=rt.params, cfg=cfg, find_winners=rt.find_winners)
+            params=rt.params, cfg=cfg, find_winners=rt.find_winners,
+            update_phase=rt.update_phase)
         it += 1
         checked = it % rt.check_every == 0
         done, qe = False, float("nan")
@@ -360,7 +365,8 @@ class FusedVariant(_FleetBacked):
         fs, steps = fleet_core.run_fleet_superstep(
             fs, rt.probes[None], jnp.asarray([length], jnp.int32),
             sampler=rt.scratch["fleet_sampler"], params=rt.params,
-            cfg=ss, find_winners=rt.find_winners)
+            cfg=ss, find_winners=rt.find_winners,
+            update_phase=rt.update_phase)
         state, rng = fs.network(0), fs.rng[0]
         state.w.block_until_ready()
         dt = time.perf_counter() - t0

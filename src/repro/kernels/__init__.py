@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages for the paper's profiled hot spots.
+
+One package per kernel, each with the same layout: ``kernel.py`` (the
+Pallas TPU kernels), ``ops.py`` (jit'd padding/masking wrapper + engine
+adapter), ``ref.py`` (an independent pure-jnp oracle for the tests).
+
+  find_winners — the paper's parallelized phase (Sec. 2.5): batched
+      top-2 nearest-unit search as a streaming MXU matmul reduction.
+  update_phase — the phase the paper leaves as future work once Find
+      Winners is parallel: winner lock + dense adaptation as tiled
+      one-hot contractions (lock scatter-min, accumulators, edge aging).
+
+Kernels are selected per-``RunSpec`` through the BACKENDS registry
+(``repro.gson.registry``); every kernel keeps a reference fallback, so
+this package is an optional acceleration layer, never a dependency of
+correctness.
+"""

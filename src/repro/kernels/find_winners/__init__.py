@@ -1,3 +1,9 @@
+"""Pallas kernel suite for the Find Winners phase (paper Sec. 2.5).
+
+The phase the paper parallelizes: batched top-2 nearest-unit search,
+as a streaming MXU matmul reduction. kernel.py / ops.py / ref.py —
+see the package docstring in ``repro.kernels``.
+"""
 from repro.kernels.find_winners.ops import (find_winners_op,
                                             make_pallas_find_winners)
 from repro.kernels.find_winners.ref import find_winners_ref

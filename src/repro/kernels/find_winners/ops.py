@@ -1,4 +1,6 @@
-"""jit'd public wrapper: padding, masking, backend dispatch."""
+"""jit'd public wrapper for the Find Winners kernel (paper Sec. 2.5):
+shape padding on misaligned tiles only, in-kernel activity masking,
+and the engine-facing ``FindWinnersFn`` adapter."""
 from __future__ import annotations
 
 from functools import partial

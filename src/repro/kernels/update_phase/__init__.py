@@ -1,0 +1,11 @@
+"""Pallas kernel suite for the multi-signal Update phase.
+
+Layout mirrors ``repro.kernels.find_winners``: ``kernel.py`` holds the
+Pallas TPU kernels, ``ops.py`` the jit'd padding/masking wrapper and
+the engine adapter, ``ref.py`` an independent dense oracle. Selected
+per-``RunSpec`` through the BACKENDS registry ("pallas-update" /
+"pallas-full" — see ``repro.gson.registry``).
+"""
+from repro.kernels.update_phase.ops import (make_pallas_update_phase,
+                                            update_phase_op)
+from repro.kernels.update_phase.ref import update_phase_dense

@@ -277,7 +277,9 @@ def build_train_step(bundle: ModelBundle, mesh, rules, dep: DeployCfg):
 
     step = make_train_step(
         bundle, mesh, rules, tcfg,
-        act_ctx=lambda: activation_sharding(act, mesh))
+        act_ctx=lambda: activation_sharding(
+            act, mesh,
+            manual_axes=frozenset({"pod"}) if pod_manual else frozenset()))
 
     params, specs = param_tree(bundle, mesh, rules)
     opt_specs = opt_lib.match_opt_specs(

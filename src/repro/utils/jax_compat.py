@@ -47,6 +47,24 @@ class _EmptyAbstractMesh:
     empty = True
 
 
+def has_native_shard_map() -> bool:
+    """True when ``jax.shard_map`` is the real thing, not our shim.
+
+    The distinction matters for *partially-manual* regions
+    (``axis_names`` a strict subset of the mesh): the legacy
+    ``jax.experimental.shard_map`` lowering does not mark inner
+    shardings as manual subgroups, so a
+    ``with_sharding_constraint`` inside such a region aborts XLA
+    ("Check failed: sharding.IsManualSubgroup()"). Callers that emit
+    constraints inside partially-manual code (``models.act_sharding``)
+    degrade to no-constraint on the shim — GSPMD still propagates
+    operand shardings, only the explicit hint is lost (see
+    docs/architecture.md §Distributed).
+    """
+    sm = getattr(jax, "shard_map", None)
+    return sm is not None and getattr(sm, "__module__", "") != __name__
+
+
 def install() -> None:
     if not hasattr(jax, "shard_map"):
         jax.shard_map = _compat_shard_map

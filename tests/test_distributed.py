@@ -202,9 +202,16 @@ def test_smoke_cells_lower_on_pod_mesh(devices8):
 
 @pytest.mark.skipif(
     LEGACY_SHARD_MAP,
-    reason="partial-manual shard_map (axis_names={'pod'}) + sharding "
-           "constraints abort XLA (IsManualSubgroup check) on the "
-           "pinned jax 0.4.x; needs a jax with native jax.shard_map")
+    reason="partial-manual shard_map (axis_names={'pod'}) aborts the "
+           "pinned jax 0.4.x XLA (hlo_sharding_util.cc 'Check failed: "
+           "sharding.IsManualSubgroup()'). Not fixable from our side: "
+           "explicit activation constraints inside the region are "
+           "already dropped on the legacy shim (act_sharding.constrain "
+           "+ jax_compat.has_native_shard_map), and the abort persists "
+           "because the legacy partial-AUTO lowering leaves "
+           "GSPMD-propagated inner shardings unmarked as manual "
+           "subgroups. Needs native jax.shard_map — full analysis in "
+           "docs/architecture.md §Distributed")
 def test_train_step_with_compression_and_straggler_masking(devices8):
     out = devices8("""
         import jax, jax.numpy as jnp, numpy as np

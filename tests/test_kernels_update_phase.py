@@ -1,0 +1,281 @@
+"""Update-phase Pallas suite vs the scatter reference (interpret mode).
+
+Three-way triangulation: the tiled kernels (``ops.update_phase_op``),
+the dense one-hot oracle (``ref.update_phase_dense``) and the engine's
+scatter reference (``multi.update_phase_reference``) must agree on the
+same ``UpdateOut`` contract.
+
+Numerics policy (documented in the ops module and docs/architecture.md):
+
+* bit-exact: ``selected`` / ``adapt`` / ``ins`` (the integer winner
+  lock + comparisons), edge ages (integer-valued f32 increments), GNG
+  error accumulation (post-lock winners are distinct — single
+  contributor per unit);
+* float tolerance (1e-6 per step): neighbor weight pulls and neighbor
+  habituation, where several signals share a neighbor unit and the
+  kernel sums the collisions in tile order while the reference sums in
+  scatter order;
+* trajectory tests (full fused superstep, B=4 fleet) run horizons short
+  enough that the per-step ulp drift cannot flip a discrete decision
+  (near-tie winner flips are chaotic amplification, the same
+  phenomenon ``test_distributed`` documents for sharded Find Winners —
+  measured safe beyond 20 iterations for the pinned seeds).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gson
+from repro.core.gson.multi import (find_winners_reference,
+                                   multi_signal_step_impl,
+                                   update_phase_reference)
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams, init_state
+from repro.kernels.update_phase.ops import (make_pallas_update_phase,
+                                            update_phase_op)
+from repro.kernels.update_phase.ref import update_phase_dense
+
+W_TOL = dict(rtol=1e-6, atol=1e-7)
+
+
+def grown_state(model: str, capacity=200, max_deg=12, iters=25, m=64,
+                surface="torus", seed=0):
+    """A non-trivial network: ``iters`` reference steps on ``surface``."""
+    p = GSONParams(model=model, insertion_threshold=0.3)
+    sampler = make_sampler(surface)
+    st = init_state(jax.random.key(seed), capacity=capacity, dim=3,
+                    max_deg=max_deg,
+                    seed_points=sampler(jax.random.key(seed + 1), 2))
+    rng = jax.random.key(seed + 7)
+    for i in range(iters):
+        rng, k = jax.random.split(rng)
+        st = multi_signal_step_impl(st, sampler(k, m), p,
+                                    refresh_states=(i % 5 == 0))
+    return p, sampler, st, rng
+
+
+def phase_inputs(p, sampler, st, rng, m=64, masked=None):
+    rng, k = jax.random.split(rng)
+    sig = sampler(k, m)
+    _, k_lock = jax.random.split(st.rng)
+    wid, sid, d2b, _ = find_winners_reference(sig, st.w, st.active)
+    mask = None
+    if masked is not None:
+        mask = jnp.arange(m) < masked
+    return sig, wid, sid, d2b, k_lock, mask
+
+
+def assert_update_out_close(ref, got, *, err_exact: bool, tag: str):
+    np.testing.assert_array_equal(np.asarray(ref.selected),
+                                  np.asarray(got.selected), f"{tag} selected")
+    np.testing.assert_array_equal(np.asarray(ref.adapt),
+                                  np.asarray(got.adapt), f"{tag} adapt")
+    np.testing.assert_array_equal(np.asarray(ref.ins),
+                                  np.asarray(got.ins), f"{tag} ins")
+    np.testing.assert_array_equal(np.asarray(ref.age),
+                                  np.asarray(got.age), f"{tag} age")
+    np.testing.assert_allclose(np.asarray(ref.w), np.asarray(got.w),
+                               err_msg=f"{tag} w", **W_TOL)
+    np.testing.assert_allclose(np.asarray(ref.firing),
+                               np.asarray(got.firing),
+                               err_msg=f"{tag} firing", **W_TOL)
+    if err_exact:
+        np.testing.assert_array_equal(np.asarray(ref.error),
+                                      np.asarray(got.error), f"{tag} error")
+    else:
+        np.testing.assert_allclose(np.asarray(ref.error),
+                                   np.asarray(got.error),
+                                   err_msg=f"{tag} error", **W_TOL)
+
+
+@pytest.mark.parametrize("model", ["soam", "gwr", "gng"])
+def test_update_out_parity_all_models(model):
+    p, sampler, st, rng = grown_state(model)
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng)
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p)
+    ker = update_phase_op(st, sig, wid, sid, d2b, k_lock, p,
+                          interpret=True)
+    den = update_phase_dense(st, sig, wid, sid, d2b, k_lock, p)
+    assert_update_out_close(ref, ker, err_exact=(model == "gng"),
+                            tag=f"{model} kernel")
+    assert_update_out_close(ref, den, err_exact=(model == "gng"),
+                            tag=f"{model} dense")
+
+
+@pytest.mark.parametrize("m,cap,deg,bm,bc", [
+    (1, 100, 8, 256, 256),      # single signal, misaligned capacity
+    (37, 100, 8, 8, 128),       # everything misaligned, small blocks
+    (64, 128, 12, 16, 128),     # aligned m, multiple m-tiles
+    (200, 512, 16, 64, 128),    # multiple tiles on both axes
+])
+def test_shape_and_block_sweep(m, cap, deg, bm, bc):
+    p, sampler, st, rng = grown_state("gwr", capacity=cap, max_deg=deg)
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng, m=m)
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p)
+    ker = update_phase_op(st, sig, wid, sid, d2b, k_lock, p,
+                          block_m=bm, block_c=bc, interpret=True)
+    assert_update_out_close(ref, ker, err_exact=False,
+                            tag=f"m={m} cap={cap}")
+
+
+def test_masked_rows_are_inert():
+    """With the fused superstep's signal mask, masked rows never win
+    the lock and the outputs match the reference masked run exactly."""
+    p, sampler, st, rng = grown_state("soam")
+    sig, wid, sid, d2b, k_lock, mask = phase_inputs(p, sampler, st, rng,
+                                                    m=64, masked=23)
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p, mask)
+    ker = update_phase_op(st, sig, wid, sid, d2b, k_lock, p, mask,
+                          interpret=True)
+    assert not np.any(np.asarray(ker.selected)[23:])
+    assert_update_out_close(ref, ker, err_exact=False, tag="masked")
+
+
+def test_winner_lock_survivors_are_distinct():
+    p, sampler, st, rng = grown_state("gwr", capacity=64, iters=10)
+    # many signals, few units -> heavy winner collisions
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng,
+                                                 m=256)
+    ker = update_phase_op(st, sig, wid, sid, d2b, k_lock, p,
+                          interpret=True)
+    sel = np.asarray(ker.selected)
+    winners = np.asarray(wid)[sel]
+    assert len(winners) == len(set(winners.tolist()))
+    # and the survivor set is exactly the reference's
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p)
+    np.testing.assert_array_equal(sel, np.asarray(ref.selected))
+
+
+def test_last_collision_mode_raises():
+    p, sampler, st, rng = grown_state("gwr", iters=5)
+    p = GSONParams(model="gwr", neighbor_collision="last")
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng)
+    with pytest.raises(NotImplementedError, match="last"):
+        update_phase_op(st, sig, wid, sid, d2b, k_lock, p,
+                        interpret=True)
+
+
+def test_full_step_with_update_kernel_matches_reference():
+    """End-to-end multi_signal_step_impl with the kernel plugged in:
+    discrete fields bitwise, float fields within tolerance."""
+    up = make_pallas_update_phase(interpret=True)
+    for model in ("soam", "gng"):
+        p, sampler, st, rng = grown_state(model)
+        rng, k = jax.random.split(rng)
+        sig = sampler(k, 64)
+        out_k = multi_signal_step_impl(st, sig, p, refresh_states=False,
+                                       update_phase=up)
+        out_r = multi_signal_step_impl(st, sig, p, refresh_states=False)
+        np.testing.assert_array_equal(np.asarray(out_k.nbr),
+                                      np.asarray(out_r.nbr))
+        np.testing.assert_array_equal(np.asarray(out_k.active),
+                                      np.asarray(out_r.active))
+        assert int(out_k.n_active) == int(out_r.n_active)
+        assert int(out_k.discarded) == int(out_r.discarded)
+        np.testing.assert_allclose(np.asarray(out_k.w),
+                                   np.asarray(out_r.w), **W_TOL)
+
+
+# ---------------------------------------------------------------------------
+# registry dispatch
+
+
+def test_backend_registry_exposes_update_entries():
+    assert {"reference", "pallas", "pallas-update",
+            "pallas-full"} <= set(gson.BACKENDS.names())
+    be = gson.resolve_backend("pallas-update")
+    assert isinstance(be, gson.Backend)
+    assert be.update_phase is not None
+    # shared adapter instance: the jit cache key must be stable
+    assert gson.resolve_backend("pallas-update").update_phase \
+        is be.update_phase
+    assert gson.resolve_backend("pallas-full").update_phase \
+        is be.update_phase
+    # legacy: a bare callable is a Find-Winners-only backend
+    legacy = gson.resolve_backend(find_winners_reference)
+    assert legacy.find_winners is find_winners_reference
+    assert legacy.update_phase is None
+
+
+def _short_spec(**kw):
+    base = dict(variant="multi", model="gwr", sampler="sphere",
+                backend="pallas-update", capacity=128, max_deg=12,
+                max_iterations=16, check_every=8, qe_threshold=1e-4,
+                n_probe=256)
+    base.update(kw)
+    return gson.RunSpec(**base)
+
+
+def test_session_dispatches_update_kernel_per_runspec():
+    """backend="pallas-update" through the public Session API tracks the
+    reference trajectory at ulp tolerance (16 host-dispatched iters)."""
+    st_k, _ = gson.run(_short_spec(), seed=0)
+    st_r, _ = gson.run(_short_spec(backend="reference"), seed=0)
+    np.testing.assert_array_equal(np.asarray(st_k.nbr),
+                                  np.asarray(st_r.nbr))
+    assert int(st_k.n_active) == int(st_r.n_active)
+    assert int(st_k.signal_count) == int(st_r.signal_count)
+    np.testing.assert_allclose(np.asarray(st_k.w), np.asarray(st_r.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_full_fused_superstep_parity():
+    """ONE fused superstep (16 on-device iterations, sampling + masked
+    m-schedule + cadenced checks inside) with the update kernel vs the
+    reference backend."""
+    cfg = gson.FusedConfig(superstep=gson.SuperstepConfig(length=16))
+    spec = _short_spec(variant="multi-fused", variant_config=cfg)
+    st_k, stats_k = gson.run(spec, seed=0)
+    st_r, stats_r = gson.run(spec.replace(backend="reference"), seed=0)
+    assert stats_k.iterations == stats_r.iterations == 16
+    np.testing.assert_array_equal(np.asarray(st_k.nbr),
+                                  np.asarray(st_r.nbr))
+    assert int(st_k.n_active) == int(st_r.n_active)
+    assert int(st_k.signal_count) == int(st_r.signal_count)
+    np.testing.assert_allclose(np.asarray(st_k.w), np.asarray(st_r.w),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_k.firing),
+                               np.asarray(st_r.firing),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fleet_b4_parity_and_session_consistency():
+    """The B=4 fleet on the update kernel: (a) network i matches the
+    same-seed B=1 Session on the SAME backend — discrete fields
+    bitwise, float fields at ulp tolerance (vmap batches the kernel's
+    MXU contractions, whose reduction order is batch-size-sensitive by
+    one ulp, unlike the batch-invariant elementwise scatters of the
+    reference path whose exact fleet bit-identity test_fleet.py pins);
+    (b) the fleet tracks the reference-backend fleet at ulp tolerance."""
+    cfg = gson.FusedConfig(superstep=gson.SuperstepConfig(length=12))
+    spec = _short_spec(variant="multi-fused", variant_config=cfg,
+                       max_iterations=12)
+    seeds = range(4)
+    fleet_k = gson.run_fleet(gson.FleetSpec.broadcast(spec, seeds=seeds))
+    # (a) vs B=1 sessions on the kernel backend
+    for i, seed in enumerate(seeds):
+        st_i, _ = gson.run(spec, seed=seed)
+        st_f = fleet_k[i][0]
+        np.testing.assert_array_equal(np.asarray(st_f.age),
+                                      np.asarray(st_i.age))
+        for field in ("w", "firing", "error"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(st_f, field)),
+                np.asarray(getattr(st_i, field)),
+                err_msg=f"fleet net {i} {field}", **W_TOL)
+        np.testing.assert_array_equal(np.asarray(st_f.nbr),
+                                      np.asarray(st_i.nbr))
+    # (b) tolerance vs the reference-backend fleet
+    fleet_r = gson.run_fleet(gson.FleetSpec.broadcast(
+        spec.replace(backend="reference"), seeds=seeds))
+    for i in range(4):
+        st_k, st_r = fleet_k[i][0], fleet_r[i][0]
+        np.testing.assert_array_equal(np.asarray(st_k.nbr),
+                                      np.asarray(st_r.nbr))
+        assert int(st_k.n_active) == int(st_r.n_active)
+        np.testing.assert_allclose(np.asarray(st_k.w),
+                                   np.asarray(st_r.w),
+                                   rtol=1e-5, atol=1e-6)

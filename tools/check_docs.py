@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs surface (CI docs job).
+
+Validates every relative link in the given markdown files: the target
+file must exist, and a ``#fragment`` pointing into a markdown file must
+match one of its headings under GitHub's anchor slugging (lowercase,
+drop punctuation, spaces -> hyphens). External (http/https/mailto)
+links are skipped — CI must not flake on the network.
+
+  python tools/check_docs.py README.md docs/*.md EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor algorithm, close enough for our headings."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)            # inline formatting
+    s = re.sub(r"[^\w\- ]", "", s)         # punctuation (keeps _ and -)
+    return s.replace(" ", "-")
+
+
+_ANCHOR_CACHE: dict[Path, set[str]] = {}
+
+
+def anchors_of(md: Path) -> set[str]:
+    md = md.resolve()
+    if md in _ANCHOR_CACHE:
+        return _ANCHOR_CACHE[md]
+    text = md.read_text(encoding="utf-8")
+    # '#'-comment lines inside fenced code are NOT headings on GitHub
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    slugs: dict[str, int] = {}
+    out = set()
+    for m in HEADING_RE.finditer(text):
+        slug = github_slug(m.group(1))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    _ANCHOR_CACHE[md] = out
+    return out
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # strip fenced code blocks: links inside code are not navigation
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES):
+            # in-page fragments: validate against this file's headings
+            if target.startswith("#") and \
+                    target[1:] not in anchors_of(md):
+                errors.append(f"{md}: broken fragment {target!r}")
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link {target!r} "
+                          f"({dest} does not exist)")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in anchors_of(dest):
+                errors.append(f"{md}: broken anchor {target!r} "
+                              f"(no heading slugs to {frag!r} in "
+                              f"{dest.name})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or [Path("README.md")]
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        print(f"FAIL: missing input files: {missing}")
+        return 1
+    errors = []
+    checked = 0
+    for f in files:
+        errors += check_file(f)
+        checked += 1
+    for e in errors:
+        print(f"FAIL: {e}")
+    print(f"checked {checked} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

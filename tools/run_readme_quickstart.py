@@ -1,0 +1,33 @@
+#!/usr/bin/env python
+"""Execute the README quickstart verbatim (CI docs job).
+
+Extracts the FIRST fenced ``python`` block from README.md and runs it.
+The README is the onboarding surface — if the snippet drifts from the
+API, this fails before a reader does. Run with ``PYTHONPATH=src``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+
+def main() -> int:
+    readme = Path(__file__).resolve().parent.parent / "README.md"
+    m = re.search(r"```python\n(.*?)```", readme.read_text(), re.DOTALL)
+    if not m:
+        print("FAIL: no ```python block found in README.md")
+        return 1
+    snippet = m.group(1)
+    print("--- README quickstart ---")
+    print(snippet)
+    print("--- executing ---")
+    t0 = time.time()
+    exec(compile(snippet, str(readme) + ":quickstart", "exec"), {})
+    print(f"--- quickstart OK in {time.time() - t0:.1f}s ---")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
