@@ -23,7 +23,7 @@ def main(argv=None):
     ap.add_argument("--budget", default="quick", choices=("quick", "full"))
     ap.add_argument("--only", default=None,
                     help="comma list: convergence,phase,per_signal,"
-                         "update,superstep,roofline,variants,fleet")
+                         "update,superstep,roofline,variants,fleet,mesh")
     ap.add_argument("--out", default=BENCH_JSON,
                     help="aggregate JSON path (default: repo root)")
     args = ap.parse_args(argv)
@@ -57,6 +57,10 @@ def main(argv=None):
         # batched multi-network execution vs looped Sessions
         from benchmarks import fleet_matrix
         results["fleet_matrix"] = fleet_matrix.run(budget=args.budget)
+    if want("mesh"):
+        # sharded fleets at forced host device counts (subprocesses)
+        from benchmarks import mesh_matrix
+        results["mesh_matrix"] = mesh_matrix.run(budget=args.budget)
     if want("convergence"):
         from benchmarks import table_convergence
         results["convergence"] = table_convergence.run(budget=args.budget)

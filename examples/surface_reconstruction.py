@@ -25,6 +25,17 @@ network steps inside the same vmapped program (grouped into one cohort
 per distinct insertion threshold), streams its own progress rows, and
 exports its own mesh (``--out base.obj`` -> ``base_0_sphere.obj``, ...).
 
+``--mesh D`` shards execution over D devices (``gson.MeshSpec``): with
+``--fleet`` it shards the fleet's network axis (each device owns whole
+networks, zero per-iteration collectives; cohorts pad themselves when
+the fleet does not divide D), without it, the signal axis of the single
+network (the paper's data partitioning). On a CPU-only host, force the
+device count first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+  PYTHONPATH=src python examples/surface_reconstruction.py \\
+      --fleet 8 --mesh 4 --variant multi-fused
+
 After the run each reconstructed topology is validated (Euler
 characteristic vs the surface's known genus) and optionally exported as
 a Wavefront .obj.
@@ -68,7 +79,7 @@ def export_obj(state, path: str):
     return len(ids), len(faces)
 
 
-def build_spec(args) -> gson.RunSpec:
+def build_spec(args, *, signal_mesh: bool = False) -> gson.RunSpec:
     variant, backend = args.variant, args.backend
     if variant == "kernel":     # legacy alias: multi + Pallas backend
         variant = "multi"
@@ -81,6 +92,8 @@ def build_spec(args) -> gson.RunSpec:
             refresh_every=2)
     elif variant == "multi":
         vcfg = gson.MultiConfig(refresh_every=2)
+    mesh = (gson.MeshSpec(axis="signal", devices=args.mesh)
+            if signal_mesh and args.mesh else None)
     return gson.RunSpec(
         variant=variant,
         model=gson.GSONParams(model="soam",
@@ -91,6 +104,7 @@ def build_spec(args) -> gson.RunSpec:
         sampler=args.surface,
         backend=backend,
         variant_config=vcfg,
+        mesh=mesh,
         capacity=args.capacity, max_deg=16,
         check_every=25, max_iterations=args.iters)
 
@@ -120,7 +134,9 @@ def run_fleet(args) -> None:
             model="soam", insertion_threshold=THRESH.get(s, 0.25),
             age_max=64.0, eps_b=0.1, eps_n=0.01, stuck_window=60))
         for s in picks)
-    fspec = gson.FleetSpec(specs, tuple(range(args.fleet)))
+    fleet_mesh = (gson.MeshSpec(axis="network", devices=args.mesh)
+                  if args.mesh else None)
+    fspec = gson.FleetSpec(specs, tuple(range(args.fleet)), fleet_mesh)
     if args.resume:
         if not args.checkpoint_dir:
             raise SystemExit("--resume requires --checkpoint-dir")
@@ -162,6 +178,11 @@ def main(argv=None):
                          "dense Update) — see docs/api.md")
     ap.add_argument("--superstep", type=int, default=64,
                     help="iterations per device call (multi-fused)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="D",
+                    help="shard over D devices: the fleet's network "
+                         "axis with --fleet, else the signal axis of "
+                         "the single network (see gson.MeshSpec; on "
+                         "CPU force the device count via XLA_FLAGS)")
     ap.add_argument("--iters", type=int, default=800)
     ap.add_argument("--capacity", type=int, default=768)
     ap.add_argument("--seed", type=int, default=42)
@@ -178,7 +199,7 @@ def main(argv=None):
         run_fleet(args)
         return
 
-    spec = build_spec(args)
+    spec = build_spec(args, signal_mesh=True)
     if args.resume:
         if not args.checkpoint_dir:
             ap.error("--resume requires --checkpoint-dir")

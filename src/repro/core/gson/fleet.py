@@ -115,6 +115,30 @@ def wrap_single(state: NetworkState, rng: jax.Array,
     )
 
 
+def pad_fleet(fstate: FleetState, pad: int) -> FleetState:
+    """Append ``pad`` placeholder networks (copies of slot 0, marked
+    converged) so the batch divides a device mesh. Placeholders are
+    frozen by every driver (mask False / ``max_steps`` 0), so they cost
+    one network's worth of memory per device and nothing else; the
+    sharded checkpoint format stores only the real networks and re-pads
+    on restore (``repro.gson.fleet``)."""
+    if pad <= 0:
+        return fstate
+
+    def padleaf(x):
+        if jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+            d = jax.random.key_data(x)
+            d = jnp.concatenate(
+                [d, jnp.broadcast_to(d[:1], (pad,) + d.shape[1:])])
+            return jax.random.wrap_key_data(d)
+        return jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
+
+    out = jax.tree.map(padleaf, fstate)
+    return out.replace(
+        converged=out.converged.at[fstate.batch:].set(True))
+
+
 def _where(mask: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     """Per-network select with broadcasting over trailing axes; handles
     typed PRNG-key leaves (``jnp.where`` rejects extended dtypes)."""

@@ -48,6 +48,17 @@ i is bit-identical to ``Session(spec_i, seed=seed_i)``:
     fleet.resume()
     state3, stats3 = fleet.result(3)          # unbatched per-network
 
+Distributed execution is one more declarative knob, ``MeshSpec``
+(paper Sec. 2.5's taxonomy): ``FleetSpec(..., mesh=gson.MeshSpec(
+axis="network"))`` shards the fleet's B axis across devices — each
+device owns whole networks, zero per-iteration collectives, and
+network i stays bit-identical to its unsharded run — while
+``RunSpec(mesh=gson.MeshSpec(axis="signal"))`` shards one network's
+signal batch (the paper's data partitioning; Update stays a
+replicated deterministic state machine). Checkpoints store only
+logical network state, so a sharded snapshot restores on any device
+count.
+
 Registries: ``VARIANTS`` (single / indexed / multi / multi-fused),
 ``MODELS`` (gng / gwr / soam), ``SAMPLERS`` (benchmark surfaces; any
 ``repro.data.pointclouds`` stream or ``(rng, n) -> points`` callable is
@@ -70,7 +81,7 @@ from repro.gson.registry import (BACKENDS, MODELS, SAMPLERS, VARIANTS,
                                  resolve_backend, resolve_model,
                                  resolve_sampler)
 from repro.gson.session import RunStats, Session, run
-from repro.gson.spec import RunSpec, resolve, resolve_variant
+from repro.gson.spec import MeshSpec, RunSpec, resolve, resolve_variant
 from repro.gson.variants import (DEFAULT_BBOX, FusedConfig, IndexedConfig,
                                  MultiConfig, Runtime, SingleConfig,
                                  StepResult, VariantStrategy,
@@ -79,7 +90,7 @@ from repro.gson.variants import (DEFAULT_BBOX, FusedConfig, IndexedConfig,
 __all__ = [
     "BACKENDS", "MODELS", "SAMPLERS", "VARIANTS",
     "Backend", "DEFAULT_BBOX", "FleetSession", "FleetSpec", "FleetState",
-    "FusedConfig", "GSONParams", "IndexedConfig",
+    "FusedConfig", "GSONParams", "IndexedConfig", "MeshSpec",
     "ModelDef", "MultiConfig", "NetworkState", "Registry", "RunSpec",
     "RunStats", "Runtime", "Session", "SingleConfig", "StepResult",
     "SuperstepConfig", "VariantStrategy", "check_convergence",

@@ -24,6 +24,16 @@ history rows (tagged with their ``network`` index), budgeted
 ``run(budget)`` / ``resume()``, and atomic ``checkpoint()`` /
 ``FleetSession.restore`` of the whole stacked fleet through
 ``repro.checkpoint.manager``.
+
+A ``FleetSpec`` may also carry a :class:`~repro.gson.spec.MeshSpec`
+(``axis="network"``): the cohort's leading B axis is then sharded
+across devices and the whole cohort runs as ONE shard_map program with
+zero per-iteration collectives — each device owns ``B/ndev`` networks
+(``repro.core.gson.distributed.make_sharded_fleet_programs``).
+Cohorts whose batch does not divide the mesh are padded with frozen
+placeholder networks; checkpoints store only the real networks, so a
+snapshot taken on an 8-device mesh restores bit-identically on 4
+devices, 1 device, or no mesh at all (resharding on restore).
 """
 from __future__ import annotations
 
@@ -37,10 +47,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import manager as ckpt
+from repro.core.gson import distributed as dist_core
 from repro.core.gson import fleet as fleet_core
 from repro.core.gson import metrics
 from repro.gson.session import RunStats, _key_data, _wrap_key
-from repro.gson.spec import RunSpec, resolve
+from repro.gson.spec import MeshSpec, RunSpec, resolve
 
 HistoryCallback = Callable[[dict], None]
 
@@ -49,10 +60,16 @@ _BIG = np.int64(1) << 60
 
 @dataclass(frozen=True)
 class FleetSpec:
-    """B runs: one ``RunSpec`` + PRNG seed per network."""
+    """B runs: one ``RunSpec`` + PRNG seed per network.
+
+    ``mesh`` (optional, ``MeshSpec(axis="network")``) shards every
+    cohort's leading B axis across devices — each device owns its own
+    subset of whole networks, zero per-iteration collectives.
+    """
 
     specs: tuple[RunSpec, ...]
     seeds: tuple[int, ...]
+    mesh: MeshSpec | None = None
 
     def __post_init__(self):
         if not self.specs:
@@ -61,11 +78,24 @@ class FleetSpec:
             raise ValueError(
                 f"{len(self.specs)} specs vs {len(self.seeds)} seeds — "
                 "one seed per network")
+        if self.mesh is not None:
+            if self.mesh.axis != "network":
+                raise ValueError(
+                    "FleetSpec.mesh shards the fleet's network axis "
+                    "(MeshSpec(axis='network')); to shard one "
+                    "network's signal batch put the MeshSpec on its "
+                    "RunSpec instead")
+            if any(s.mesh is not None for s in self.specs):
+                raise ValueError(
+                    "a network-sharded fleet cannot also shard member "
+                    "signal axes (nested shard_map); drop either "
+                    "FleetSpec.mesh or the member RunSpec.mesh")
 
     @classmethod
     def broadcast(cls, spec: RunSpec, seeds: Sequence[int] | None = None,
                   *, samplers: Sequence | None = None,
-                  count: int | None = None) -> "FleetSpec":
+                  count: int | None = None,
+                  mesh: MeshSpec | None = None) -> "FleetSpec":
         """One spec over many seeds and/or samplers.
 
         ``samplers`` (names or objects) swap the sampler axis per
@@ -85,7 +115,7 @@ class FleetSpec:
                 raise ValueError(
                     f"{len(samplers)} samplers vs {len(seeds)} seeds")
             specs = tuple(spec.replace(sampler=s) for s in samplers)
-        return cls(specs, seeds)
+        return cls(specs, seeds, mesh)
 
     @property
     def batch(self) -> int:
@@ -97,17 +127,27 @@ def _cohort_key(spec: RunSpec, strategy, rt):
 
     Samplers, seeds and run limits (max_iterations / max_signals) are
     per-network operands and deliberately NOT part of the key.
+    ``spec.mesh`` (signal-axis sharding) IS part of it: it selects the
+    sharded Find Winners program.
     """
     return (strategy.name, rt.params, rt.vcfg, rt.find_winners,
-            rt.update_phase,
+            rt.update_phase, spec.mesh,
             spec.capacity, spec.dim, spec.max_deg, spec.check_every,
             spec.qe_threshold, spec.n_probe)
 
 
 class Cohort:
-    """One compiled program's worth of networks (same static shape)."""
+    """One compiled program's worth of networks (same static shape).
 
-    def __init__(self, rows):
+    With ``mesh`` (a network-axis :class:`MeshSpec`), the cohort's B
+    axis is sharded across devices: the three device programs are the
+    shard_map versions from ``repro.core.gson.distributed``, and the
+    batch is padded with ``pad`` frozen placeholder networks so every
+    device owns the same number. All host mirrors, budgets and results
+    address the *real* ``batch`` networks only.
+    """
+
+    def __init__(self, rows, mesh: MeshSpec | None = None):
         # rows: [(global_index, spec, seed, strategy, rt), ...]
         self.members = [r[0] for r in rows]
         self.specs = [r[1] for r in rows]
@@ -121,16 +161,42 @@ class Cohort:
         self.update_phase = rt0.update_phase
         self.cfg = self.strategy.fleet_cfg(self.spec, rt0.params,
                                            rt0.vcfg)
-        self.sampler = fleet_core.as_fleet_sampler(
-            [rt.sampler for rt in rts])
         B = len(rows)
+        self.mesh = mesh
+        if mesh is not None:
+            self.pad = (-B) % mesh.ndev()
+            (self._iterate, self._check,
+             self._superstep) = dist_core.make_sharded_fleet_programs(
+                mesh.build(), mesh.axis_name)
+        else:
+            self.pad = 0
+            self._iterate = fleet_core.fleet_iterate
+            self._check = fleet_core.fleet_check
+            self._superstep = fleet_core.run_fleet_superstep
+        samplers = [rt.sampler for rt in rts]
+        # placeholder networks mirror slot 0 (frozen, never stepped)
+        padded = samplers + samplers[:1] * self.pad
+        self.sampler = fleet_core.as_fleet_sampler(padded)
+        self.run_sampler = self.sampler
+        if mesh is not None and not isinstance(
+                self.sampler, fleet_core.BroadcastSampler):
+            # heterogeneous samplers scatter by GLOBAL slot index,
+            # which a device-local shard cannot do — pre-split them by
+            # the static mesh layout and switch on the device position
+            ndev = mesh.ndev()
+            local = len(padded) // ndev
+            self.run_sampler = dist_core.ShardSwitchSampler(
+                tuple(fleet_core.as_fleet_sampler(
+                    padded[d * local:(d + 1) * local])
+                    for d in range(ndev)),
+                mesh.axis_name)
         self.max_iterations = np.asarray(
             [s.max_iterations for s in self.specs], np.int64)
         self.max_signals = np.asarray(
             [s.max_signals for s in self.specs], np.int64)
         self.fstate: fleet_core.FleetState | None = None
         self.probes = None
-        # host mirrors of the per-network run status
+        # host mirrors of the per-network run status (real networks)
         self.iterations = np.zeros(B, np.int64)
         self.converged = np.zeros(B, bool)
         self.signals = np.zeros(B, np.int64)
@@ -139,10 +205,18 @@ class Cohort:
     def batch(self) -> int:
         return len(self.members)
 
+    def _pad_up(self, x: np.ndarray, fill=0) -> jax.Array:
+        """(B,) host operand -> (B + pad,) device operand."""
+        if self.pad:
+            x = np.concatenate(
+                [x, np.full(self.pad, fill, dtype=np.asarray(x).dtype)])
+        return jnp.asarray(x)
+
     def start(self) -> None:
         if self.fstate is not None:
             return
-        rng0 = jnp.stack([jax.random.key(s) for s in self.seeds])
+        seeds = self.seeds + self.seeds[:1] * self.pad
+        rng0 = jnp.stack([jax.random.key(s) for s in seeds])
         self.fstate, self.probes = fleet_core.fleet_init(
             rng0, sampler=self.sampler, capacity=self.spec.capacity,
             dim=self.spec.dim, max_deg=self.spec.max_deg,
@@ -164,32 +238,34 @@ class Cohort:
         Returns ``(steps, checked)`` — per-network iterations executed
         and which networks have a fresh history row to emit.
         """
+        B = self.batch
         act = self.active() & (budget > 0)
-        zeros = np.zeros(self.batch, np.int64)
+        zeros = np.zeros(B, np.int64)
         if not act.any():
             return zeros, zeros.astype(bool)
         if self.strategy.fleet_mode == "device":
             ss = self.cfg
             sig_left = self.max_signals - self.signals
             max_steps = np.minimum.reduce([
-                np.full(self.batch, ss.length, np.int64),
+                np.full(B, ss.length, np.int64),
                 self.max_iterations - self.iterations,
                 -(-sig_left // ss.max_parallel),
                 budget])
             # like Session: an active network always gets >= 1 step
             max_steps = np.where(act, np.maximum(max_steps, 1), 0)
-            self.fstate, steps = fleet_core.run_fleet_superstep(
+            self.fstate, steps = self._superstep(
                 self.fstate, self.probes,
-                jnp.asarray(max_steps, jnp.int32),
-                sampler=self.sampler, params=self.params, cfg=self.cfg,
-                find_winners=self.find_winners,
+                self._pad_up(max_steps.astype(np.int32)),
+                sampler=self.run_sampler, params=self.params,
+                cfg=self.cfg, find_winners=self.find_winners,
                 update_phase=self.update_phase)
-            steps = np.asarray(steps).astype(np.int64)
+            steps = np.asarray(steps)[:B].astype(np.int64)
             checked = act & (steps > 0)   # one row per superstep
-            self.converged = np.asarray(self.fstate.converged).copy()
+            self.converged = np.asarray(self.fstate.converged)[:B].copy()
         else:
-            self.fstate = fleet_core.fleet_iterate(
-                self.fstate, jnp.asarray(act), sampler=self.sampler,
+            self.fstate = self._iterate(
+                self.fstate, self._pad_up(act, fill=False),
+                sampler=self.run_sampler,
                 params=self.params, cfg=self.cfg,
                 find_winners=self.find_winners,
                 update_phase=self.update_phase)
@@ -197,13 +273,15 @@ class Cohort:
             checked = act & ((self.iterations + steps)
                              % self.spec.check_every == 0)
             if checked.any():
-                self.fstate = fleet_core.fleet_check(
-                    self.fstate, self.probes, jnp.asarray(checked),
+                self.fstate = self._check(
+                    self.fstate, self.probes,
+                    self._pad_up(checked, fill=False),
                     params=self.params, cfg=self.cfg)
-                self.converged = np.asarray(self.fstate.converged).copy()
+                self.converged = np.asarray(
+                    self.fstate.converged)[:B].copy()
         self.iterations = self.iterations + steps
         self.signals = np.asarray(
-            self.fstate.nets.signal_count).astype(np.int64)
+            self.fstate.nets.signal_count)[:B].astype(np.int64)
         return steps, checked
 
 
@@ -240,7 +318,8 @@ class FleetSession:
             key = _cohort_key(spec, strategy, rt)
             groups.setdefault(key, []).append((i, spec, seed, strategy,
                                                rt))
-        self.cohorts = [Cohort(rows) for rows in groups.values()]
+        self.cohorts = [Cohort(rows, fleet.mesh)
+                        for rows in groups.values()]
         self._where: dict[int, tuple[Cohort, int]] = {}
         for c in self.cohorts:
             for local, i in enumerate(c.members):
@@ -406,17 +485,24 @@ class FleetSession:
         return [self.result(i) for i in range(self.batch)]
 
     # ------------------------------------------------------------------
-    # checkpointing: the whole stacked fleet, one atomic snapshot
+    # checkpointing: the whole stacked fleet, one atomic snapshot.
+    # Only the REAL networks are stored (mesh padding trimmed), so the
+    # format is independent of the mesh the run executed on — a
+    # snapshot written under 8-way sharding restores on any device
+    # count (the restore path re-pads for the restoring mesh).
     def _savable_tree(self) -> dict:
         tree = {}
         for ci, c in enumerate(self.cohorts):
             fs = c.fstate
+            B = c.batch
             tree[f"cohort{ci}"] = {
-                "nets": fs.nets.replace(rng=_key_data(fs.nets.rng)),
-                "rng": _key_data(fs.rng),
-                "iteration": fs.iteration,
-                "converged": fs.converged,
-                "qe": fs.qe,
+                "nets": jax.tree.map(
+                    lambda x: x[:B],
+                    fs.nets.replace(rng=_key_data(fs.nets.rng))),
+                "rng": _key_data(fs.rng)[:B],
+                "iteration": fs.iteration[:B],
+                "converged": fs.converged[:B],
+                "qe": fs.qe[:B],
             }
         return tree
 
@@ -452,12 +538,12 @@ class FleetSession:
         for ci, c in enumerate(sess.cohorts):
             t = tree[f"cohort{ci}"]
             nets = t["nets"].replace(rng=_wrap_key(t["nets"].rng))
-            c.fstate = fleet_core.FleetState(
+            c.fstate = fleet_core.pad_fleet(fleet_core.FleetState(
                 nets=nets,
                 rng=_wrap_key(t["rng"]),
                 iteration=jnp.asarray(t["iteration"], jnp.int32),
                 converged=jnp.asarray(t["converged"], bool),
-                qe=jnp.asarray(t["qe"], jnp.float32))
+                qe=jnp.asarray(t["qe"], jnp.float32)), c.pad)
             c.iterations = np.asarray(t["iteration"]).astype(np.int64)
             c.converged = np.asarray(t["converged"]).astype(bool)
             c.signals = np.asarray(nets.signal_count).astype(np.int64)

@@ -211,6 +211,12 @@ def resolve_backend(backend: str | Any | None) -> Backend:
     Find-Winners-only axis (e.g. the shard_map searches in
     ``core/gson/distributed.py``) and runs the reference Update phase.
     ``None`` selects the reference for both phases.
+
+    Backends compose with device meshes rather than registering sharded
+    variants here: a ``RunSpec.mesh`` (signal axis) wraps whichever
+    ``find_winners`` this resolves to in the data-parallel shard_map
+    program (``distributed.signal_sharded_find_winners``), so e.g.
+    ``backend="pallas"`` + mesh runs the Pallas kernel per shard.
     """
     if backend is None:
         return Backend("reference")

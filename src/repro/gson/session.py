@@ -24,6 +24,13 @@ that can stop and continue:
     (or any) snapshot — long reconstructions survive preemption.
 
 ``run(spec)`` is the one-shot convenience wrapper.
+
+Distributed runs need no session changes: a ``RunSpec`` carrying a
+signal-axis :class:`~repro.gson.spec.MeshSpec` resolves to a sharded
+Find Winners program (``resolve`` swaps the backend callable), and the
+checkpoint format stores logical network state only, so snapshots move
+freely between device counts. Network-axis sharding lives one level up,
+on ``FleetSpec`` (see ``repro.gson.fleet``).
 """
 from __future__ import annotations
 

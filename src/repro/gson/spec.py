@@ -12,11 +12,18 @@ and run limits shared by every variant. ``resolve(spec)`` turns it into
 the concrete strategy + Runtime the session drives; everything
 downstream (Session, GSONEngine shim, serving, benchmarks) goes through
 this one function.
+
+Distributed execution is declared the same way: a :class:`MeshSpec`
+names a device mesh, and ``RunSpec.mesh`` (signal-axis sharding of one
+network, the paper's data partitioning) or ``FleetSpec.mesh``
+(network-axis sharding of a cohort, see ``repro.gson.fleet``) places
+the run on it — no call-site changes anywhere downstream.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Any
 
 from repro.core.gson.state import GSONParams
@@ -26,12 +33,76 @@ from repro.gson.variants import Runtime, VariantStrategy
 
 
 @dataclass(frozen=True)
+class MeshSpec:
+    """A declarative device mesh: which axis to shard, over how many
+    devices.
+
+    ``axis`` picks the parallelization strategy (paper Sec. 2.5
+    taxonomy, see ``repro.core.gson.distributed``):
+
+    * ``"network"`` — shard a *fleet*'s leading B axis: each device
+      owns ``B/ndev`` whole networks, zero per-iteration collectives.
+      Goes on :class:`~repro.gson.fleet.FleetSpec`.
+    * ``"signal"`` — shard the signal batch of ONE network's multi-
+      signal step (the paper's data partitioning): each device finds
+      winners for its local signals, the Update phase runs as a
+      replicated deterministic state machine. Goes on
+      :class:`RunSpec`; composes with any Find Winners backend.
+
+    ``devices=None`` uses every visible device. The spec is a frozen,
+    hashable value — it participates in cohort jit keys — and the
+    concrete ``jax.sharding.Mesh`` is only built when a session starts
+    (:meth:`build`), never at import time.
+    """
+
+    axis: str = "network"           # "network" | "signal"
+    devices: int | None = None      # None = all visible devices
+    axis_name: str = "gson"         # mesh axis label
+
+    def __post_init__(self):
+        if self.axis not in ("network", "signal"):
+            raise ValueError(
+                f"MeshSpec.axis must be 'network' (shard a fleet's B "
+                f"axis) or 'signal' (shard one network's signal "
+                f"batch); got {self.axis!r}")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(
+                f"MeshSpec.devices must be >= 1 or None (= all "
+                f"visible), got {self.devices}")
+
+    def ndev(self) -> int:
+        import jax
+        return (self.devices if self.devices is not None
+                else len(jax.devices()))
+
+    def build(self):
+        """The concrete single-axis ``jax.sharding.Mesh`` (memoized, so
+        equal specs share one mesh — and downstream one jit cache)."""
+        return _build_mesh(self)
+
+
+@lru_cache(maxsize=None)
+def _build_mesh(ms: MeshSpec):
+    import jax
+    import numpy as np
+    devices = jax.devices()
+    n = ms.ndev()
+    if n > len(devices):
+        raise RuntimeError(
+            f"MeshSpec wants {n} devices, found {len(devices)}; on a "
+            "host-only platform run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (ms.axis_name,))
+
+
+@dataclass(frozen=True)
 class RunSpec:
     """Everything needed to reproduce one run (modulo the PRNG seed).
 
     Axis fields accept a registered name or a concrete object; the typed
     per-variant knobs live in ``variant_config`` (``None`` means the
-    variant's defaults).
+    variant's defaults). ``mesh`` (optional) shards the signal axis of
+    the multi-signal step across a device mesh — see :class:`MeshSpec`.
     """
 
     variant: str | Any = "multi"
@@ -39,6 +110,7 @@ class RunSpec:
     sampler: str | Any = "sphere"
     backend: str | Any | None = "reference"
     variant_config: Any = None
+    mesh: MeshSpec | None = None
 
     # pool geometry
     capacity: int = 4096
@@ -82,12 +154,26 @@ def resolve(spec: RunSpec) -> tuple[VariantStrategy, Runtime]:
             f"variant {strategy.name!r} takes a "
             f"{strategy.config_cls.__name__}, got {type(vcfg).__name__}")
     be = resolve_backend(spec.backend)
+    find_winners = be.find_winners
+    if spec.mesh is not None:
+        if spec.mesh.axis != "signal":
+            raise ValueError(
+                "RunSpec.mesh shards the signal axis of one network "
+                "(MeshSpec(axis='signal')); to shard a fleet's network "
+                "axis put the MeshSpec on the FleetSpec instead")
+        # memoized per (mesh, axes, backend): ONE sharded adapter
+        # instance, so every program that keys its jit cache on the
+        # find_winners callable compiles once
+        from repro.core.gson.distributed import signal_sharded_find_winners
+        find_winners = signal_sharded_find_winners(
+            spec.mesh.build(), (spec.mesh.axis_name,),
+            inner=be.find_winners)
     rt = Runtime(
         spec=spec,
         params=resolve_model(spec.model),
         vcfg=vcfg,
         sampler=resolve_sampler(spec.sampler),
-        find_winners=be.find_winners,
+        find_winners=find_winners,
         update_phase=be.update_phase,
     )
     return strategy, rt

@@ -179,31 +179,45 @@ class ReconstructionJob:
 class ReconstructionServer:
     """Fleet-slot serving of growing-network reconstructions.
 
-    The LM engine above batches *tokens*; this batches *networks*: up
-    to ``slots`` queued jobs are admitted together as one
+    The LM engine above batches *tokens*; this batches *networks*:
+    queued fleet-capable jobs are admitted together as one
     ``repro.gson.FleetSession`` — a single compiled program stepping
     every job's network at once (same-shaped specs share a cohort;
     mixed shapes compile one program per cohort). Each tick advances
-    the whole wave by ``slice_iters`` iterations per network; jobs that
-    finish early freeze in place (the batch shape stays static) until
-    the wave drains, then the next wave refills the slots — exactly the
-    LM engine's wave pattern, applied to whole networks.
+    every live wave by ``slice_iters`` iterations per network.
+
+    Admission is **incremental**: a slot frees the moment its job
+    finishes, and the next tick admits queued jobs into the freed
+    capacity as a *new* wave running alongside the old one — running
+    jobs are never re-sorted or re-stacked (their compiled programs and
+    signal streams are untouched), and a single long-running job can no
+    longer starve the queue behind a drained wave. Within one wave,
+    early-finished networks still freeze in place (the batch shape
+    stays static) — freezing is per network, admission is per slot.
 
     Jobs are declared as ``RunSpec``s. Variants without a batched step
     program (the sequential references "single"/"indexed") are served
     on the legacy path: one budgeted ``Session`` per slot, time-sliced
-    alongside the fleet wave.
+    alongside the fleet waves.
+
+    ``mesh`` (a ``repro.gson.MeshSpec(axis="network")``) places every
+    admitted wave onto a device mesh: the wave's B axis is sharded so
+    each device owns whole networks (cohorts pad themselves when the
+    wave does not divide the mesh), with zero per-iteration
+    collectives and no change to any job's results.
     """
 
-    def __init__(self, slots: int = 4, slice_iters: int = 50):
+    def __init__(self, slots: int = 4, slice_iters: int = 50,
+                 mesh=None):
         self.slots = slots
         self.slice_iters = slice_iters
+        self.mesh = mesh
         self.queue: list[ReconstructionJob] = []
         self.finished: list[ReconstructionJob] = []
         self.ticks = 0
         self._next_jid = 0
-        self._wave: list[ReconstructionJob] = []      # fleet-backed jobs
-        self._fleet = None                            # FleetSession
+        # live waves: (FleetSession, its jobs in network order)
+        self._fleets: list[tuple[object, list[ReconstructionJob]]] = []
         self._solo: list[ReconstructionJob] = []      # legacy Session jobs
 
     def submit(self, spec, seed: int = 0) -> ReconstructionJob:
@@ -218,49 +232,74 @@ class ReconstructionServer:
         return getattr(resolve_variant(spec.variant), "fleet_capable",
                        False)
 
-    def _admit_wave(self):
-        """Refill the slots from the queue: one FleetSession for every
-        fleet-capable job in the wave, legacy Sessions for the rest."""
+    def _live_jobs(self) -> list[ReconstructionJob]:
+        return ([j for _, jobs in self._fleets for j in jobs
+                 if not j.done]
+                + [j for j in self._solo if not j.done])
+
+    def _admit(self, free: int):
+        """Admit up to ``free`` queued jobs: fleet-capable ones become
+        ONE new FleetSession (stacked and compiled once, placed on the
+        server mesh), the rest legacy Sessions.
+
+        Construction can raise — a job spec the FleetSpec rejects, a
+        server mesh the host cannot build — so jobs leave the queue
+        only once their wave is fully constructed; on failure the
+        whole wave returns to the queue front and the error
+        propagates (no job is silently dropped).
+        """
         from repro.gson import FleetSession, FleetSpec, Session
         wave: list[ReconstructionJob] = []
-        while self.queue and len(wave) < self.slots:
+        while self.queue and len(wave) < free:
             wave.append(self.queue.pop(0))
         if not wave:
             return
-        fleet_jobs = [j for j in wave if self._fleet_capable(j.spec)]
-        self._solo = [j for j in wave if j not in fleet_jobs]
-        self._wave = fleet_jobs
-        if fleet_jobs:
-            fspec = FleetSpec(tuple(j.spec for j in fleet_jobs),
-                              tuple(j.seed for j in fleet_jobs))
+        try:
+            fleet_jobs = [j for j in wave
+                          if self._fleet_capable(j.spec)]
+            solo_jobs = [j for j in wave if j not in fleet_jobs]
+            fleet = None
+            if fleet_jobs:
+                fspec = FleetSpec(tuple(j.spec for j in fleet_jobs),
+                                  tuple(j.seed for j in fleet_jobs),
+                                  self.mesh)
 
-            def route(row, jobs=fleet_jobs):
-                jobs[row["network"]].history.append(row)
+                def route(row, jobs=fleet_jobs):
+                    jobs[row["network"]].history.append(row)
 
-            self._fleet = FleetSession(fspec, on_history=route)
+                fleet = FleetSession(fspec, on_history=route)
+            solo_sessions = [
+                Session(j.spec, seed=j.seed,
+                        on_history=j.history.append)
+                for j in solo_jobs]
+        except Exception:
+            self.queue[:0] = wave
+            raise
+        if fleet is not None:
             for j in fleet_jobs:
-                j.session = self._fleet
-        for j in self._solo:
-            j.session = Session(j.spec, seed=j.seed,
-                                on_history=j.history.append)
-
-    def _wave_live(self) -> bool:
-        return any(not j.done for j in self._wave + self._solo)
+                j.session = fleet
+            self._fleets.append((fleet, fleet_jobs))
+        for j, sess in zip(solo_jobs, solo_sessions):
+            j.session = sess
+            self._solo.append(j)
 
     def step(self):
-        """One tick: admit a wave when idle, else advance every slot."""
-        if not self._wave_live():
-            self._wave, self._solo, self._fleet = [], [], None
-            if self.queue:
-                self._admit_wave()
-            if not self._wave_live():
-                return
+        """One tick: refill freed slots, then advance every live slot."""
+        # drop fully-drained waves (all their networks finished)
+        self._fleets = [(f, jobs) for f, jobs in self._fleets
+                        if any(not j.done for j in jobs)]
+        self._solo = [j for j in self._solo if not j.done]
+        free = self.slots - len(self._live_jobs())
+        if free > 0 and self.queue:
+            self._admit(free)
+        if not self._live_jobs():
+            return
         self.ticks += 1
-        if self._fleet is not None:
-            self._fleet.run(budget=self.slice_iters)
-            for i, job in enumerate(self._wave):
-                if not job.done and not self._fleet.active_network(i):
-                    _, job.stats = self._fleet.result(i)
+        for fleet, jobs in self._fleets:
+            fleet.run(budget=self.slice_iters)
+            for i, job in enumerate(jobs):
+                if not job.done and not fleet.active_network(i):
+                    _, job.stats = fleet.result(i)
                     job.done = True
                     self.finished.append(job)
         for job in self._solo:
@@ -273,7 +312,7 @@ class ReconstructionServer:
                 self.finished.append(job)
 
     def run(self, max_ticks: int = 10_000) -> list[ReconstructionJob]:
-        while (self.queue or self._wave_live()) and max_ticks > 0:
+        while (self.queue or self._live_jobs()) and max_ticks > 0:
             self.step()
             max_ticks -= 1
         return self.finished

@@ -1,4 +1,6 @@
-"""ServeEngine: batched waves, slot reuse, greedy determinism."""
+"""ServeEngine: batched waves, slot reuse, greedy determinism.
+ReconstructionServer: incremental slot refill under mixed
+fleet/legacy jobs (no starvation behind a long-running wave)."""
 from __future__ import annotations
 
 import jax
@@ -6,9 +8,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import gson
 from repro.configs import get_config
+from repro.core.gson.state import GSONParams
 from repro.models.registry import get_bundle, smoke_config
-from repro.serving.engine import ServeConfig, ServeEngine
+from repro.serving.engine import (ReconstructionServer, ServeConfig,
+                                  ServeEngine)
 
 
 @pytest.fixture(scope="module")
@@ -78,3 +83,62 @@ def test_wave_slot_reuse(served):
     done = eng.run()
     assert len(done) == 6
     assert eng.prefills == 3
+
+
+# ---------------------------------------------------------------------------
+# ReconstructionServer: incremental slot refill
+
+
+def _recon_spec(variant="multi", iters=20) -> gson.RunSpec:
+    return gson.RunSpec(
+        variant=variant,
+        model=GSONParams(model="gwr", insertion_threshold=0.5),
+        sampler="sphere", capacity=64, max_deg=12,
+        max_iterations=iters, check_every=10, qe_threshold=1e-9,
+        n_probe=128)
+
+
+def test_no_slot_starvation_mixed_fleet_legacy():
+    # a long legacy ("single") job shares the server with quick fleet
+    # jobs; a queued job must be admitted as soon as a slot frees, not
+    # when the whole wave drains behind the legacy straggler
+    srv = ReconstructionServer(slots=2, slice_iters=10)
+    long_legacy = srv.submit(_recon_spec("single", iters=120))
+    quick_fleet = srv.submit(_recon_spec("multi", iters=20))
+    queued = srv.submit(_recon_spec("multi", iters=20))
+
+    srv.step()                          # both slots fill; third waits
+    assert queued.session is None
+    for _ in range(50):                 # drain the quick fleet job
+        if quick_fleet.done:
+            break
+        srv.step()
+    assert quick_fleet.done and not long_legacy.done
+    srv.step()                          # freed slot refills THIS tick
+    assert queued.session is not None, \
+        "queued job starved behind the long legacy job"
+    assert not long_legacy.done
+
+    done = srv.run(max_ticks=200)
+    assert {j.jid for j in done} == {long_legacy.jid, quick_fleet.jid,
+                                     queued.jid}
+    for job, iters in ((long_legacy, 120), (quick_fleet, 20),
+                       (queued, 20)):
+        assert job.stats.iterations == iters
+        assert job.history, "history must stream during serving"
+
+
+def test_incremental_waves_match_dedicated_sessions():
+    # jobs admitted across different (overlapping) waves still produce
+    # exactly their dedicated-session results
+    srv = ReconstructionServer(slots=2, slice_iters=7)
+    jobs = [srv.submit(_recon_spec("multi-fused", iters=n), seed=s)
+            for s, n in enumerate((12, 30, 18))]
+    srv.run(max_ticks=100)
+    for s, (job, n) in enumerate(zip(jobs, (12, 30, 18))):
+        sess = gson.Session(_recon_spec("multi-fused", iters=n), seed=s)
+        sess.run()
+        _, stats = sess.result()
+        assert job.stats.iterations == stats.iterations == n
+        assert job.stats.units == stats.units
+        assert job.stats.signals == stats.signals

@@ -1,0 +1,165 @@
+"""Perf-regression gate: diff a fresh benchmark run against the
+committed ``BENCH_gson.json`` baseline.
+
+  python tools/check_bench_regression.py BENCH_gson.json fresh.json \
+      [--tolerance 0.25] [--metrics all|sps|speedup] \
+      [--require-tables fleet_matrix,superstep] [--skip-tables ...]
+
+Walks every table (list-of-row-dicts) present in BOTH aggregates,
+matches rows by their identity fields (strings / ints / bools — the
+benchmark grid coordinates; deterministic workload counters like
+``signals`` match too because the signal streams are seeded), and
+compares the throughput metrics:
+
+  * ``signals/sec`` fields — any key ending in ``_sps`` or named
+    ``sps`` / ``signals_per_sec`` (``--metrics sps``);
+  * ``speedup*`` fields (``--metrics speedup``).
+
+Both are higher-is-better; a metric is a REGRESSION when the fresh
+value falls below ``baseline * (1 - tolerance)``. Improvements and
+raw timing fields (``t_*``, ``*_wall``, ``time_*``) never fail the
+gate. Exit code 1 on any regression, with a per-metric report either
+way.
+
+Cross-machine guidance (how the nightly job wires this): absolute
+signals/sec track the silicon the baseline was measured on, so diff
+them informationally; ``speedup*`` are same-machine ratios and make a
+sound blocking gate. ``--skip-tables`` exists for tables whose rows
+are known scheduling jitter on shared runners (e.g. ``mesh_matrix``
+host-device cells oversubscribing the physical cores).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def is_sps(key: str) -> bool:
+    return key.endswith("_sps") or key in ("sps", "signals_per_sec")
+
+
+def is_metric(key: str, metrics: str = "all") -> bool:
+    if metrics == "sps":
+        return is_sps(key)
+    if metrics == "speedup":
+        return key.startswith("speedup")
+    return is_sps(key) or key.startswith("speedup")
+
+
+def row_identity(row: dict) -> tuple:
+    """The benchmark grid coordinates: every non-float field."""
+    return tuple(sorted(
+        (k, v) for k, v in row.items()
+        if isinstance(v, (str, bool)) or (isinstance(v, int)
+                                          and not is_metric(k))))
+
+
+def match_rows(base_rows: list, fresh_rows: list):
+    """Pair rows by identity; fall back to position when identities
+    are ambiguous (duplicate grid points) or the grid changed."""
+    fresh_by_id: dict = {}
+    for i, row in enumerate(fresh_rows):
+        fresh_by_id.setdefault(row_identity(row), []).append((i, row))
+    pairs, used = [], set()
+    for i, brow in enumerate(base_rows):
+        cands = [c for c in fresh_by_id.get(row_identity(brow), ())
+                 if c[0] not in used]
+        if cands:
+            j, frow = cands[0]
+        elif i < len(fresh_rows) and i not in used:
+            j, frow = i, fresh_rows[i]
+        else:
+            continue
+        used.add(j)
+        pairs.append((brow, frow))
+    return pairs
+
+
+def check(base: dict, fresh: dict, tolerance: float,
+          require_tables=(), metrics: str = "all",
+          skip_tables=()) -> int:
+    base_r = base.get("results", {})
+    fresh_r = fresh.get("results", {})
+    missing = [t for t in require_tables if t not in fresh_r]
+    if missing:
+        print(f"FAIL: required tables missing from fresh run: "
+              f"{', '.join(missing)}")
+        return 1
+    regressions = []
+    compared = 0
+    for table, base_rows in sorted(base_r.items()):
+        if not (isinstance(base_rows, list) and base_rows
+                and isinstance(base_rows[0], dict)):
+            continue
+        if table in skip_tables:
+            print(f"  [skip] {table}: excluded via --skip-tables")
+            continue
+        fresh_rows = fresh_r.get(table)
+        if not isinstance(fresh_rows, list):
+            print(f"  [skip] {table}: not in fresh run")
+            continue
+        for brow, frow in match_rows(base_rows, fresh_rows):
+            ident = dict(row_identity(brow))
+            for key, bval in brow.items():
+                if not is_metric(key, metrics):
+                    continue
+                fval = frow.get(key)
+                if not isinstance(bval, (int, float)) or \
+                        not isinstance(fval, (int, float)):
+                    continue
+                compared += 1
+                floor = bval * (1.0 - tolerance)
+                status = "ok"
+                if fval < floor:
+                    status = "REGRESSION"
+                    regressions.append((table, ident, key, bval, fval))
+                elif fval > bval:
+                    status = "improved"
+                print(f"  [{status:>10}] {table} {ident} {key}: "
+                      f"base {bval:.3g} -> fresh {fval:.3g} "
+                      f"(floor {floor:.3g})")
+    print(f"\ncompared {compared} metrics at ±{tolerance:.0%} tolerance")
+    if compared == 0:
+        # a gate that matched nothing is a misconfigured gate, not a
+        # pass: renamed metric fields or empty tables must be loud
+        print("FAIL: zero metrics compared — baseline and fresh "
+              "aggregates share no matching metric fields")
+        return 1
+    if regressions:
+        print(f"{len(regressions)} regression(s) beyond tolerance:")
+        for table, ident, key, bval, fval in regressions:
+            print(f"  {table} {ident} {key}: {bval:.3g} -> {fval:.3g} "
+                  f"({fval / bval - 1.0:+.1%})")
+        return 1
+    print("no regressions")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_gson.json")
+    ap.add_argument("fresh", help="freshly generated aggregate")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative drop (default 0.25 = ±25%%)")
+    ap.add_argument("--metrics", default="all",
+                    choices=("all", "sps", "speedup"),
+                    help="which metric family to compare")
+    ap.add_argument("--require-tables", default="",
+                    help="comma list of tables the fresh run must "
+                         "contain (else fail)")
+    ap.add_argument("--skip-tables", default="",
+                    help="comma list of tables to exclude from the "
+                         "comparison")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    req = tuple(t for t in args.require_tables.split(",") if t)
+    skip = tuple(t for t in args.skip_tables.split(",") if t)
+    return check(base, fresh, args.tolerance, req, args.metrics, skip)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
