@@ -1,0 +1,113 @@
+"""Fault-tolerance matrix: failure-free overhead + recovery latency.
+
+Two claims back the fault-tolerance layer, and this table measures
+both so BENCH_gson.json carries them as a trajectory:
+
+* **failure-free overhead** — the per-superstep on-device health
+  screen (``fleet_health``) must cost <2% of a clean fleet run.
+  Measured as wall time of an identical B=8 fleet with the screen on
+  (``health_every=1``) vs off (``health_every=0``), both warmed.
+* **recovery latency** — how long a faulted job takes to be running
+  again: restore the newest per-job checkpoint and advance the first
+  slice (``recover_s``; the jit caches are warm, as they are inside a
+  live server, so this is restore + dispatch, not recompile).
+
+All keys here are informational (no ``speedup``/``sps`` metrics): the
+nightly perf gate regresses throughput tables, not chaos tables.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro import gson
+from repro.core.gson.state import GSONParams
+
+COLS = ["scenario", "variant", "batch", "iters_per_net", "base_wall",
+        "ft_wall", "overhead_pct", "recover_s"]
+
+B = 8
+
+
+def _spec(variant: str, iters: int) -> gson.RunSpec:
+    return gson.RunSpec(
+        variant=variant,
+        model=GSONParams(model="gwr", insertion_threshold=0.3),
+        sampler="sphere",
+        capacity=128, max_deg=12,
+        max_iterations=iters, check_every=20,
+        qe_threshold=1e-9,              # never converges: fixed workload
+        n_probe=256)
+
+
+def _fleet(spec: gson.RunSpec, health_every: int, **kw):
+    return gson.FleetSession(
+        gson.FleetSpec.broadcast(spec, seeds=range(B)),
+        health_every=health_every, **kw)
+
+
+def _timed_run(spec: gson.RunSpec, health_every: int) -> float:
+    fs = _fleet(spec, health_every)
+    t0 = time.perf_counter()
+    fs.run()
+    return time.perf_counter() - t0
+
+
+def health_overhead(variant: str, iters: int) -> dict:
+    spec = _spec(variant, iters)
+    for h in (0, 1):                    # warm both program sets
+        _timed_run(spec, h)
+    base = min(_timed_run(spec, 0) for _ in range(2))
+    ft = min(_timed_run(spec, 1) for _ in range(2))
+    return {
+        "scenario": "health_screen",
+        "variant": variant,
+        "batch": B,
+        "iters_per_net": iters,
+        "base_wall": round(base, 3),
+        "ft_wall": round(ft, 3),
+        "overhead_pct": round((ft - base) / base * 100.0, 2),
+        "recover_s": None,
+    }
+
+
+def recovery_latency(iters: int) -> dict:
+    """Checkpoint-restore-resume wall time with warm jit caches — the
+    in-server cost of bringing a faulted job back to *running*."""
+    spec = _spec("multi-fused", iters)
+    with tempfile.TemporaryDirectory() as d:
+        fs = _fleet(spec, 1, checkpoint_dir=d)
+        fs.run(budget=iters // 2)
+        fs.checkpoint()
+        t0 = time.perf_counter()
+        res = gson.FleetSession.restore(
+            gson.FleetSpec.broadcast(spec, seeds=range(B)), d)
+        res.run(budget=1)               # first post-restore slice lands
+        recover = time.perf_counter() - t0
+    return {
+        "scenario": "retry_restore",
+        "variant": "multi-fused",
+        "batch": B,
+        "iters_per_net": iters,
+        "base_wall": None,
+        "ft_wall": None,
+        "overhead_pct": None,
+        "recover_s": round(recover, 3),
+    }
+
+
+def run(budget: str = "quick") -> list[dict]:
+    iters = {"quick": 200, "full": 600}[budget]
+    rows = [health_overhead(v, iters) for v in ("multi", "multi-fused")]
+    rows.append(recovery_latency(iters))
+    emit("fault_matrix", rows, COLS)
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

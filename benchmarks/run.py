@@ -23,7 +23,8 @@ def main(argv=None):
     ap.add_argument("--budget", default="quick", choices=("quick", "full"))
     ap.add_argument("--only", default=None,
                     help="comma list: convergence,phase,per_signal,"
-                         "update,superstep,roofline,variants,fleet,mesh")
+                         "update,superstep,roofline,variants,fleet,mesh,"
+                         "faults")
     ap.add_argument("--out", default=BENCH_JSON,
                     help="aggregate JSON path (default: repo root)")
     args = ap.parse_args(argv)
@@ -61,6 +62,11 @@ def main(argv=None):
         # sharded fleets at forced host device counts (subprocesses)
         from benchmarks import mesh_matrix
         results["mesh_matrix"] = mesh_matrix.run(budget=args.budget)
+    if want("faults"):
+        # fault-tolerance overhead + recovery latency (informational:
+        # no speedup/sps keys, so the nightly gate ignores it)
+        from benchmarks import fault_matrix
+        results["fault_matrix"] = fault_matrix.run(budget=args.budget)
     if want("convergence"):
         from benchmarks import table_convergence
         results["convergence"] = table_convergence.run(budget=args.budget)

@@ -22,6 +22,13 @@ Design (orbax-style, self-contained because only jax+numpy ship here):
 
 * **Retention**: ``keep`` newest checkpoints are retained; older ones are
   deleted after a successful save (never before).
+
+* **Hygiene**: a crash mid-write leaves a ``step_*.tmp/`` orphan behind;
+  ``latest(gc_orphans=True)`` (the manager default) deletes it, and
+  :func:`restore` validates each candidate checkpoint — manifest leaf
+  names/shapes/dtypes against both the array file and the target tree —
+  falling back to the previous valid step on corruption instead of
+  surfacing an opaque npz error.
 """
 from __future__ import annotations
 
@@ -30,12 +37,19 @@ import os
 import shutil
 import threading
 import time
+import warnings
 
 import jax
 import numpy as np
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+# Fault-injection hook: called between the fsynced shard/manifest writes
+# and the atomic rename. ``repro.gson.faults`` installs a raiser here to
+# simulate a crash mid-checkpoint — the raise leaves the ``step_*.tmp``
+# orphan behind exactly as a real crash would. Always None in production.
+_PRE_PUBLISH_HOOK = None
 
 
 def _flatten_with_paths(tree):
@@ -66,25 +80,50 @@ def _write(path, host: dict, treedef, step: int, extra: dict):
         "time": time.time(),
         "treedef": str(treedef),
         "keys": sorted(host.keys()),
+        # per-leaf spec: restore validates the array file against this
+        # before trusting the checkpoint (format 2; format-1 manifests
+        # predate it and skip the self-check)
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in host.items()},
         "extra": extra,
-        "format": 1,
+        "format": 2,
     }
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1)
         f.flush()
         os.fsync(f.fileno())
+    if _PRE_PUBLISH_HOOK is not None:
+        _PRE_PUBLISH_HOOK(tmp, step)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # atomic publish
     return final
 
 
-def latest(path: str) -> int | None:
+def valid_steps(path: str) -> list[int]:
+    """All published (non-``.tmp``, manifest-bearing) steps, ascending."""
+    if not os.path.isdir(path):
+        return []
+    return sorted(
+        int(d.split("_")[1]) for d in os.listdir(path)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(path, d, _MANIFEST)))
+
+
+def latest(path: str, *, gc_orphans: bool = False) -> int | None:
+    """Newest published step (never a ``.tmp`` orphan).
+
+    ``gc_orphans=True`` also deletes ``step_*.tmp/`` directories left by
+    a crash mid-write. Only pass it when no writer can be in flight —
+    :class:`CheckpointManager` joins its worker thread first.
+    """
     if not os.path.isdir(path):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(path)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and os.path.exists(os.path.join(path, d, _MANIFEST))]
+    if gc_orphans:
+        for d in os.listdir(path):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+    steps = valid_steps(path)
     return max(steps) if steps else None
 
 
@@ -95,15 +134,61 @@ def restore(path: str, target_tree, step: int | None = None,
     ``shardings``: optional matching pytree of Sharding — each leaf is
     device_put to it (elastic resharding). Without it, leaves arrive as
     host numpy arrays.
+
+    Every candidate checkpoint is validated (manifest parses, the array
+    file loads, leaf names/shapes/dtypes match both the manifest and the
+    target tree). With ``step=None`` a corrupt newest checkpoint falls
+    back to the previous valid one (with a warning) instead of raising;
+    an explicit ``step`` raises a descriptive error.
     Returns (tree, step, extra).
     """
-    step = step if step is not None else latest(path)
-    if step is None:
+    if step is not None:
+        return _load_checked(path, step, target_tree, shardings)
+    candidates = valid_steps(path)
+    if not candidates:
         raise FileNotFoundError(f"no checkpoint under {path}")
+    for i, s in enumerate(reversed(candidates)):
+        try:
+            return _load_checked(path, s, target_tree, shardings)
+        except Exception as e:                      # noqa: BLE001
+            if i == len(candidates) - 1:
+                # every candidate failed: surface the oldest failure
+                # as-is — a structural mismatch with the target tree
+                # (KeyError / shape ValueError) is a caller bug, not
+                # corruption, and must keep its type
+                raise
+            warnings.warn(
+                f"checkpoint step {s} under {path} failed validation "
+                f"({type(e).__name__}: {e}); falling back to the "
+                "previous checkpoint", RuntimeWarning, stacklevel=2)
+
+
+def _load_checked(path: str, step: int, target_tree, shardings=None):
+    """Load one checkpoint, validating manifest vs arrays vs target."""
     d = os.path.join(path, f"step_{step:08d}")
     with open(os.path.join(d, _MANIFEST)) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(d, _ARRAYS))
+    try:
+        data = np.load(os.path.join(d, _ARRAYS))
+        array_keys = set(data.keys())
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint step {step}: corrupt array file "
+            f"({type(e).__name__}: {e})") from e
+    spec = manifest.get("leaves")
+    if spec is not None:                       # format >= 2 self-check
+        if set(spec) != array_keys:
+            raise ValueError(
+                f"checkpoint step {step}: manifest names "
+                f"{sorted(set(spec) ^ array_keys)} missing from one side")
+        for k, meta in spec.items():
+            arr = data[k]
+            if (list(arr.shape) != meta["shape"]
+                    or str(arr.dtype) != meta["dtype"]):
+                raise ValueError(
+                    f"checkpoint step {step}: leaf {k!r} is "
+                    f"{arr.shape}/{arr.dtype}, manifest says "
+                    f"{tuple(meta['shape'])}/{meta['dtype']}")
 
     leaves, treedef = _flatten_with_paths(target_tree)
     flat_shard = (None if shardings is None
@@ -160,13 +245,21 @@ class CheckpointManager:
         self._gc()
 
     def latest(self) -> int | None:
-        return latest(self.path)
+        # join first: the in-flight async save owns a live .tmp dir that
+        # must not be mistaken for (or GCed as) a crash orphan
+        self.wait()
+        return latest(self.path, gc_orphans=True)
 
     def restore(self, target_tree, step=None, shardings=None):
         self.wait()
         return restore(self.path, target_tree, step, shardings)
 
     def _gc(self):
+        for d in os.listdir(self.path):
+            # crash orphans from a previous process die here too
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.path, d),
+                              ignore_errors=True)
         steps = sorted(
             int(d.split("_")[1]) for d in os.listdir(self.path)
             if d.startswith("step_") and not d.endswith(".tmp"))

@@ -48,7 +48,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.gson.fleet import (FleetState, fleet_check_impl,
-                                   fleet_iterate_impl,
+                                   fleet_health_impl, fleet_iterate_impl,
                                    run_fleet_superstep_impl)
 from repro.core.gson.multi import (find_winners_reference,
                                    multi_signal_step_impl)
@@ -308,3 +308,24 @@ def make_sharded_fleet_programs(mesh: Mesh, axis_name: str = "fleet"):
         return _keys_from_data(out), steps
 
     return iterate, check, superstep
+
+
+@lru_cache(maxsize=None)
+def make_sharded_fleet_health(mesh: Mesh, axis_name: str = "fleet"):
+    """Sharded ``fleet_core.fleet_health``: each device screens only its
+    own ``B/ndev`` networks (no resharding of the big unit pools), and
+    only the tiny (B,) verdict is gathered back to the host. Read-only —
+    no donation, the caller keeps stepping the screened state. Memoized
+    per ``(mesh, axis_name)`` like the step programs, so the screen is
+    one compiled program per mesh for the lifetime of the process.
+    """
+    spec = P(axis_name)
+    shmap = partial(jax.shard_map, mesh=mesh, check_vma=False)
+
+    @jax.jit
+    def health(fstate):
+        body = lambda fs: fleet_health_impl(_keys_from_data(fs))
+        return shmap(body, in_specs=(spec,), out_specs=spec)(
+            _keys_to_data(fstate))
+
+    return health

@@ -48,7 +48,8 @@ from repro.core.gson import metrics
 from repro.core.gson.multi import (FindWinnersFn, UpdatePhaseFn,
                                    multi_signal_step_impl,
                                    refresh_topology, soam_converged)
-from repro.core.gson.state import GSONParams, NetworkState, init_fleet
+from repro.core.gson.state import (NO_NBR, GSONParams, NetworkState,
+                                   init_fleet)
 from repro.core.gson.superstep import SuperstepConfig, device_m_schedule
 
 
@@ -379,6 +380,50 @@ def run_fleet_superstep_impl(
     carry, _ = jax.lax.scan(scan_body, (fstate, steps0), None,
                             length=cfg.length)
     return carry
+
+
+def fleet_health_impl(fstate: FleetState) -> jax.Array:
+    """(B,) bool — True where a network's state passes the cheap
+    on-device health screen.
+
+    The screen catches the two corruption classes a poisoned signal or a
+    bad kernel produces: **non-finite state** (weights / error / firing /
+    threshold of active units) and **topology invariant violations**
+    (neighbor ids out of range or self-referential, edges pointing at
+    inactive units, ``n_active`` disagreeing with the active mask).
+    O(B · capacity · max_deg) of elementwise reductions — orders of
+    magnitude below one multi-signal iteration — so drivers can afford
+    to run it every superstep. Read-only: quarantine itself is the
+    caller masking the network out of subsequent steps (the same freeze
+    path converged networks use).
+    """
+
+    def one(net: NetworkState) -> jax.Array:
+        act = net.active
+        col = act[:, None]
+        finite = (
+            jnp.all(jnp.isfinite(jnp.where(col, net.w, 0.0)))
+            & jnp.all(jnp.isfinite(jnp.where(act, net.error, 0.0)))
+            & jnp.all(jnp.isfinite(jnp.where(act, net.firing, 0.0)))
+            & jnp.all(jnp.isfinite(jnp.where(act, net.threshold, 0.0)))
+            & jnp.all(jnp.isfinite(jnp.where(col, net.age, 0.0))))
+        cap = net.nbr.shape[0]
+        ids = jnp.arange(cap, dtype=net.nbr.dtype)[:, None]
+        has = net.nbr >= 0
+        topo = (
+            jnp.all((net.nbr >= NO_NBR) & (net.nbr < cap))
+            & jnp.all(net.nbr != ids)
+            & jnp.all(jnp.where(has,
+                                act[jnp.clip(net.nbr, 0)] & col,
+                                True))
+            & (net.n_active == jnp.sum(act.astype(jnp.int32))))
+        return finite & topo
+
+    return jax.vmap(one)(fstate.nets)
+
+
+# read-only screen: no donation (the caller keeps stepping the state)
+fleet_health = jax.jit(fleet_health_impl)
 
 
 # Donated fleet state: the B unit pools are by far the largest buffers

@@ -81,6 +81,12 @@ class FailureInjector:
         return [ev] if isinstance(ev, str) else list(ev)
 
 
+def downed_pods(events: list[str]) -> list[int]:
+    """Pod indices named by ``pod<k>_down`` events (any digit count)."""
+    return [int(e[len("pod"):-len("_down")]) for e in events
+            if e.startswith("pod") and e.endswith("_down")]
+
+
 class ElasticRunner:
     """Checkpoint-restart supervision loop around a step function.
 
@@ -108,7 +114,7 @@ class ElasticRunner:
         step = 0
         while step < n_steps:
             events = self.injector.events_at(step)
-            dead = [int(e[3]) for e in events if e.endswith("_down")]
+            dead = downed_pods(events)
             if dead:
                 # a fault fires once: the replayed steps after restart
                 # must not re-kill the same pod

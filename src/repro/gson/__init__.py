@@ -75,6 +75,11 @@ deprecation shim over this package.
 from repro.core.gson.fleet import FleetState
 from repro.core.gson.state import GSONParams, NetworkState
 from repro.core.gson.superstep import SuperstepConfig
+from repro.gson.elastic import ElasticFleetRunner
+from repro.gson.faults import (DeviceLossError, FaultySampler,
+                               GsonFaultInjector, SimulatedCrash,
+                               checkpoint_crash, lowering_failure_backend,
+                               poison_network)
 from repro.gson.fleet import FleetSession, FleetSpec, run_fleet
 from repro.gson.registry import (BACKENDS, MODELS, SAMPLERS, VARIANTS,
                                  Backend, ModelDef, Registry,
@@ -89,11 +94,13 @@ from repro.gson.variants import (DEFAULT_BBOX, FusedConfig, IndexedConfig,
 
 __all__ = [
     "BACKENDS", "MODELS", "SAMPLERS", "VARIANTS",
-    "Backend", "DEFAULT_BBOX", "FleetSession", "FleetSpec", "FleetState",
-    "FusedConfig", "GSONParams", "IndexedConfig", "MeshSpec",
-    "ModelDef", "MultiConfig", "NetworkState", "Registry", "RunSpec",
-    "RunStats", "Runtime", "Session", "SingleConfig", "StepResult",
-    "SuperstepConfig", "VariantStrategy", "check_convergence",
-    "resolve", "resolve_backend", "resolve_model", "resolve_sampler",
-    "resolve_variant", "run", "run_fleet",
+    "Backend", "DEFAULT_BBOX", "DeviceLossError", "ElasticFleetRunner",
+    "FaultySampler", "FleetSession", "FleetSpec", "FleetState",
+    "FusedConfig", "GSONParams", "GsonFaultInjector", "IndexedConfig",
+    "MeshSpec", "ModelDef", "MultiConfig", "NetworkState", "Registry",
+    "RunSpec", "RunStats", "Runtime", "Session", "SimulatedCrash",
+    "SingleConfig", "StepResult", "SuperstepConfig", "VariantStrategy",
+    "check_convergence", "checkpoint_crash", "lowering_failure_backend",
+    "poison_network", "resolve", "resolve_backend", "resolve_model",
+    "resolve_sampler", "resolve_variant", "run", "run_fleet",
 ]

@@ -1,0 +1,95 @@
+"""Elastic fleet recovery: device loss -> reshard-restore -> resume.
+
+:class:`ElasticFleetRunner` is the GSON instantiation of
+``repro.ft.elastic.ElasticRunner``: it supervises a network-sharded
+:class:`~repro.gson.fleet.FleetSession`, heartbeats one "pod" per mesh
+device through :class:`~repro.ft.elastic.PodHealth`, and on a
+``pod<k>_down`` event (or a raised
+:class:`~repro.gson.faults.DeviceLossError`):
+
+1. rebuilds the :class:`~repro.gson.spec.FleetSpec` on a mesh shrunk
+   to the survivors,
+2. reshard-restores the last checkpoint onto it — fleet checkpoints
+   store only the logical, unsharded real networks, so the 8-device
+   snapshot loads onto 4 (or 1) devices unchanged, and
+3. resumes. Surviving networks finish **bit-identical** to a
+   no-failure run: signals are a pure function of each network's PRNG
+   state, the snapshot carries that state, and the runner's fixed
+   ``tick_iters`` slicing keeps superstep boundaries aligned across
+   the restart (``tests/test_robustness.py`` asserts this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.ft.elastic import FailureInjector, PodHealth, downed_pods
+from repro.gson.faults import DeviceLossError
+from repro.gson.fleet import FleetSession, FleetSpec
+from repro.gson.spec import MeshSpec
+
+
+class ElasticFleetRunner:
+    """Checkpoint-restart supervision for a mesh-sharded fleet."""
+
+    def __init__(self, fleet: FleetSpec, checkpoint_dir: str, *,
+                 tick_iters: int = 25, checkpoint_every_ticks: int = 1,
+                 injector: FailureInjector | None = None, keep: int = 5):
+        if fleet.mesh is None:
+            raise ValueError(
+                "ElasticFleetRunner supervises a network-sharded fleet; "
+                "give the FleetSpec a MeshSpec(axis='network')")
+        self.fspec = fleet
+        self.dir = checkpoint_dir
+        self.tick_iters = tick_iters
+        self.ckpt_every = checkpoint_every_ticks
+        self.keep = keep
+        self.injector = injector or FailureInjector()
+        self.restarts = 0
+        self.log: list[dict] = []
+        self.session = FleetSession(fleet, checkpoint_dir=checkpoint_dir,
+                                    keep=keep)
+
+    def _rebuild(self, ndev: int) -> None:
+        """Survivor mesh + reshard-restore of the newest checkpoint."""
+        mesh = dataclasses.replace(self.fspec.mesh, devices=ndev)
+        self.fspec = dataclasses.replace(self.fspec, mesh=mesh)
+        self.session = FleetSession.restore(self.fspec, self.dir,
+                                            keep=self.keep)
+
+    def run(self) -> FleetSession:
+        """Drive the fleet to completion through any scheduled faults."""
+        ndev = self.fspec.mesh.ndev()
+        health = PodHealth(ndev)
+        tick = 0
+        # a fault at tick 0 needs something to restore
+        self.session.checkpoint()
+        while self.session.active:
+            dead = downed_pods(self.injector.events_at(tick))
+            if dead:
+                # one-shot: replayed ticks must not re-kill the pod
+                self.injector.schedule.pop(tick, None)
+                for p in dead:
+                    for _ in range(health.dead_after):
+                        health.miss(p)
+                ndev -= len(dead)
+                if ndev < 1:
+                    raise DeviceLossError(
+                        "every device lost; nothing to restore onto")
+                self.restarts += 1
+                t0 = time.perf_counter()
+                self._rebuild(ndev)
+                dt = time.perf_counter() - t0
+                health = PodHealth(ndev)
+                self.log.append({"event": "restart", "tick": tick,
+                                 "devices": ndev, "restore_s": dt})
+            t0 = time.perf_counter()
+            self.session.run(budget=self.tick_iters)
+            dt = time.perf_counter() - t0
+            for p in range(ndev):
+                health.beat(p, tick, dt)
+            tick += 1
+            if self.ckpt_every and tick % self.ckpt_every == 0:
+                self.session.checkpoint()
+        self.session.checkpoint()
+        return self.session

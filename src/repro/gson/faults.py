@@ -1,0 +1,196 @@
+"""Deterministic fault injection for the GSON stack.
+
+Single-host container, so failures are *simulated* — but each injector
+below fires inside the real code path the corresponding production
+failure would hit, and every recovery mechanism under test is the one
+a deployment would run:
+
+* **crash mid-checkpoint** — :func:`checkpoint_crash` arms the
+  checkpoint manager's pre-publish hook: the writer dies after the
+  fsynced ``.tmp`` payload but before the atomic rename, leaving the
+  exact orphan a real crash leaves. Recovery:
+  ``latest(gc_orphans=True)`` + validated ``restore`` fallback.
+* **poisoned network state** — :func:`poison_network` writes NaNs (or
+  a topology-invariant violation) into one network of a live fleet.
+  Recovery: the per-superstep health screen quarantines it
+  (``repro.gson.fleet.Cohort._screen``) while wave-mates keep running.
+* **sampler failures** — :class:`FaultySampler` raises (trace-time,
+  before any state is consumed) or stalls for its first N uses.
+  Recovery: serving retry-with-backoff from the job's last checkpoint.
+* **backend lowering failure** — :func:`lowering_failure_backend`
+  raises at first trace exactly like a Pallas kernel that fails to
+  lower. Recovery: ``registry.reference_fallback`` swaps in the
+  reference pair and the run proceeds with identical results.
+* **device loss** — a ``pod<k>_down`` schedule entry (or a
+  :class:`DeviceLossError`) downs mesh devices; recovery is the
+  reshard-restore path in ``repro.gson.elastic.ElasticFleetRunner``.
+
+Schedules are plain dicts, so every test run is bit-reproducible.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt_manager
+
+
+class SimulatedCrash(RuntimeError):
+    """The checkpoint writer 'died' between the fsynced ``.tmp`` write
+    and the atomic rename — the only window a crash can orphan."""
+
+
+class DeviceLossError(RuntimeError):
+    """Simulated loss of mesh devices mid-run."""
+
+
+# ---------------------------------------------------------------------------
+# crash mid-checkpoint
+
+def arm_checkpoint_crash(times: int = 1) -> None:
+    """The next ``times`` checkpoint publishes raise
+    :class:`SimulatedCrash` after their payload is written (leaving the
+    ``step_*.tmp`` orphan behind); later publishes succeed."""
+    left = {"n": times}
+
+    def hook(tmp_dir: str, step: int):
+        if left["n"] > 0:
+            left["n"] -= 1
+            raise SimulatedCrash(
+                f"injected crash publishing step {step} ({tmp_dir})")
+
+    ckpt_manager._PRE_PUBLISH_HOOK = hook
+
+
+def disarm_checkpoint_crash() -> None:
+    ckpt_manager._PRE_PUBLISH_HOOK = None
+
+
+@contextlib.contextmanager
+def checkpoint_crash(times: int = 1):
+    """``with checkpoint_crash(): ...`` — armed inside, disarmed after."""
+    arm_checkpoint_crash(times)
+    try:
+        yield
+    finally:
+        disarm_checkpoint_crash()
+
+
+# ---------------------------------------------------------------------------
+# poisoned network state
+
+def poison_network(session, i: int, kind: str = "nan") -> None:
+    """Corrupt network ``i`` of a live ``FleetSession`` in place.
+
+    ``kind="nan"`` zaps unit 0's weights to NaN (a diverged update);
+    ``kind="topology"`` hangs an edge off an *inactive* pool slot (an
+    invariant no rule set can produce — and one the structural tail
+    never repairs, since edge ops only rewrite rows of active winners,
+    so it survives until a screen runs). Both are caught by the
+    on-device health screen.
+    """
+    c, local = session._where[i]
+    nets = c.fstate.nets
+    if kind == "nan":
+        w = np.asarray(nets.w).copy()
+        w[local, 0, :] = np.nan
+        nets = nets.replace(w=jnp.asarray(w))
+    elif kind == "topology":
+        nbr = np.asarray(nets.nbr).copy()
+        nbr[local, -1, 0] = 0            # inactive last slot grows an edge
+        nets = nets.replace(nbr=jnp.asarray(nbr))
+    else:
+        raise ValueError(f"unknown poison kind {kind!r} "
+                         "(expected 'nan' or 'topology')")
+    c.fstate = c.fstate.replace(nets=nets)
+
+
+# ---------------------------------------------------------------------------
+# sampler failures
+
+class FaultySampler:
+    """Engine sampler wrapper that fails or stalls its first uses.
+
+    The wrapped callable keeps the engine sampler contract
+    ``f(rng, n) -> (n, dim)``. Failures fire at trace time — before
+    any PRNG state or signal is consumed — so a retried run replays
+    the exact signal stream of an uninjected one. ``hang_s`` sleeps on
+    every use (host-side, also trace time) to exercise stall
+    detectors without burning minutes.
+    """
+
+    def __init__(self, inner, *, fail_times: int = 0, hang_s: float = 0.0,
+                 exc: type = RuntimeError):
+        self.inner = inner
+        self.fail_times = fail_times
+        self.hang_s = hang_s
+        self.exc = exc
+        self.calls = 0
+
+    def __call__(self, rng, n):
+        self.calls += 1
+        if self.hang_s:
+            time.sleep(self.hang_s)
+        if self.calls <= self.fail_times:
+            raise self.exc(
+                f"injected sampler failure (use {self.calls} of "
+                f"{self.fail_times})")
+        return self.inner(rng, n)
+
+
+# ---------------------------------------------------------------------------
+# backend lowering failure
+
+def failing_find_winners(*args, **kw):
+    """Raises on first trace, like a Pallas kernel failing to lower."""
+    raise RuntimeError("injected kernel lowering failure")
+
+
+def lowering_failure_backend():
+    """A ``Backend`` whose Find Winners dies at trace time.
+
+    Feed it to ``RunSpec(backend=...)`` to exercise the
+    fallback-to-reference path (``registry.reference_fallback``).
+    """
+    from repro.gson.registry import Backend
+    return Backend(
+        "injected-broken", failing_find_winners, None,
+        "injected: raises at trace time like a failed lowering")
+
+
+# ---------------------------------------------------------------------------
+# schedule-driven injection for the serving engine
+
+@dataclasses.dataclass
+class GsonFaultInjector:
+    """tick -> fault events for :class:`~repro.serving.engine.\
+ReconstructionServer`.
+
+    ``schedule`` maps a server tick to one event dict (or a list):
+
+    * ``{"kind": "poison", "job": jid, "poison": "nan"|"topology"}`` —
+      corrupt that job's network in its live fleet wave.
+    * ``{"kind": "crash_checkpoint"}`` — the next checkpoint publish
+      dies mid-write (arms :func:`arm_checkpoint_crash`).
+    * ``{"kind": "fail_job", "job": jid}`` — raise inside that job's
+      advance (a sampler/driver exception surfacing to the server).
+    * ``{"kind": "device_loss", "survivors": n}`` — shrink the serving
+      mesh to ``n`` devices; live sharded waves fault and their jobs
+      retry from checkpoint on the survivor mesh.
+
+    Events fire once (the server pops them), so post-recovery replay
+    of the same tick numbers does not re-inject.
+    """
+
+    schedule: dict = dataclasses.field(default_factory=dict)
+
+    def events_at(self, tick: int) -> list[dict]:
+        ev = self.schedule.get(tick, [])
+        return [ev] if isinstance(ev, dict) else list(ev)
+
+    def pop(self, tick: int) -> None:
+        self.schedule.pop(tick, None)

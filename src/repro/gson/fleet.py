@@ -50,6 +50,7 @@ from repro.checkpoint import manager as ckpt
 from repro.core.gson import distributed as dist_core
 from repro.core.gson import fleet as fleet_core
 from repro.core.gson import metrics
+from repro.gson import registry
 from repro.gson.session import RunStats, _key_data, _wrap_key
 from repro.gson.spec import MeshSpec, RunSpec, resolve
 
@@ -147,7 +148,8 @@ class Cohort:
     address the *real* ``batch`` networks only.
     """
 
-    def __init__(self, rows, mesh: MeshSpec | None = None):
+    def __init__(self, rows, mesh: MeshSpec | None = None,
+                 health_every: int = 1):
         # rows: [(global_index, spec, seed, strategy, rt), ...]
         self.members = [r[0] for r in rows]
         self.specs = [r[1] for r in rows]
@@ -173,6 +175,9 @@ class Cohort:
             self._iterate = fleet_core.fleet_iterate
             self._check = fleet_core.fleet_check
             self._superstep = fleet_core.run_fleet_superstep
+        self._health = (dist_core.make_sharded_fleet_health(
+            mesh.build(), mesh.axis_name) if mesh is not None
+            else fleet_core.fleet_health)
         samplers = [rt.sampler for rt in rts]
         # placeholder networks mirror slot 0 (frozen, never stepped)
         padded = samplers + samplers[:1] * self.pad
@@ -200,6 +205,14 @@ class Cohort:
         self.iterations = np.zeros(B, np.int64)
         self.converged = np.zeros(B, bool)
         self.signals = np.zeros(B, np.int64)
+        # fault tolerance: quarantined networks freeze exactly like
+        # converged ones (same batched-select mask); ``health_every``
+        # = 0 disables the screen
+        self.health_every = health_every
+        self.quarantined = np.zeros(B, bool)
+        self.faults: list[dict] = []
+        self._ticks = 0
+        self._stepped = False
 
     @property
     def batch(self) -> int:
@@ -225,9 +238,48 @@ class Cohort:
 
     def active(self) -> np.ndarray:
         """(B,) which networks still have work (Session.active, batched)."""
-        return (~self.converged
+        return (~self.converged & ~self.quarantined
                 & (self.iterations < self.max_iterations)
                 & (self.signals < self.max_signals))
+
+    def _recover_backend(self, err: Exception) -> None:
+        """A device program failed before any successful step — almost
+        always a kernel backend failing to lower. Swap in the reference
+        pair (identical results, slower) and let the caller retry; any
+        other failure re-raises. Lowering errors surface at trace time,
+        before buffers are donated, so the retry reuses ``fstate``."""
+        fb = (None if self._stepped
+              else registry.reference_fallback(
+                  self.find_winners, self.update_phase, err))
+        if fb is None:
+            raise err
+        self.find_winners, self.update_phase = fb
+
+    def _screen(self) -> None:
+        """On-device health check; quarantine poisoned networks.
+
+        Non-finite weights/errors or broken topology invariants freeze
+        the offending network via the same masking that freezes
+        converged ones — the rest of the cohort keeps running, and a
+        structured fault record lands in ``self.faults`` for the
+        serving layer to retry the job from its last checkpoint.
+        """
+        B = self.batch
+        healthy = np.asarray(self._health(self.fstate))[:B]
+        bad = ~healthy & ~self.quarantined
+        if not bad.any():
+            return
+        units = np.asarray(self.fstate.nets.n_active)
+        for local in np.nonzero(bad)[0]:
+            self.faults.append({
+                "network": self.members[local],
+                "iteration": int(self.iterations[local]),
+                "units": int(units[local]),
+                "kind": "unhealthy_state",
+                "detail": "non-finite weights/errors or topology "
+                          "invariant violation",
+            })
+        self.quarantined |= bad
 
     def tick(self, budget: np.ndarray):
         """Advance each network by up to ``budget[i]`` iterations.
@@ -243,6 +295,24 @@ class Cohort:
         zeros = np.zeros(B, np.int64)
         if not act.any():
             return zeros, zeros.astype(bool)
+        if self.health_every:
+            # screen BEFORE stepping: the structural tail sanitizes
+            # dangling/inactive edges and recomputes n_active every
+            # iteration, so corruption injected between ticks is only
+            # observable pre-step — and a poisoned network must be
+            # frozen before its state is stepped again. "device" ticks
+            # are whole supersteps (screen every health_every ticks);
+            # "host" ticks are single iterations, so piggyback the
+            # convergence-check cadence to keep the overhead amortized
+            due = (self._ticks % self.health_every == 0
+                   if self.strategy.fleet_mode == "device" else
+                   (act & (self.iterations
+                           % self.spec.check_every == 0)).any())
+            if due:
+                self._screen()
+                act = self.active() & (budget > 0)
+                if not act.any():
+                    return zeros, zeros.astype(bool)
         if self.strategy.fleet_mode == "device":
             ss = self.cfg
             sig_left = self.max_signals - self.signals
@@ -253,22 +323,32 @@ class Cohort:
                 budget])
             # like Session: an active network always gets >= 1 step
             max_steps = np.where(act, np.maximum(max_steps, 1), 0)
-            self.fstate, steps = self._superstep(
+            call = lambda: self._superstep(           # noqa: E731
                 self.fstate, self.probes,
                 self._pad_up(max_steps.astype(np.int32)),
                 sampler=self.run_sampler, params=self.params,
                 cfg=self.cfg, find_winners=self.find_winners,
                 update_phase=self.update_phase)
+            try:
+                self.fstate, steps = call()
+            except Exception as e:                    # noqa: BLE001
+                self._recover_backend(e)
+                self.fstate, steps = call()
             steps = np.asarray(steps)[:B].astype(np.int64)
             checked = act & (steps > 0)   # one row per superstep
             self.converged = np.asarray(self.fstate.converged)[:B].copy()
         else:
-            self.fstate = self._iterate(
+            call = lambda: self._iterate(             # noqa: E731
                 self.fstate, self._pad_up(act, fill=False),
                 sampler=self.run_sampler,
                 params=self.params, cfg=self.cfg,
                 find_winners=self.find_winners,
                 update_phase=self.update_phase)
+            try:
+                self.fstate = call()
+            except Exception as e:                    # noqa: BLE001
+                self._recover_backend(e)
+                self.fstate = call()
             steps = act.astype(np.int64)
             checked = act & ((self.iterations + steps)
                              % self.spec.check_every == 0)
@@ -282,6 +362,8 @@ class Cohort:
         self.iterations = self.iterations + steps
         self.signals = np.asarray(
             self.fstate.nets.signal_count)[:B].astype(np.int64)
+        self._stepped = True
+        self._ticks += 1
         return steps, checked
 
 
@@ -297,7 +379,8 @@ class FleetSession:
                  seeds: Sequence[int] | None = None, *,
                  on_history: HistoryCallback | None = None,
                  verbose: bool = False, checkpoint_dir: str | None = None,
-                 checkpoint_every: int = 0, keep: int = 3):
+                 checkpoint_every: int = 0, keep: int = 3,
+                 health_every: int = 1):
         if not isinstance(fleet, FleetSpec):
             specs = tuple(fleet)
             fleet = FleetSpec(
@@ -318,7 +401,7 @@ class FleetSession:
             key = _cohort_key(spec, strategy, rt)
             groups.setdefault(key, []).append((i, spec, seed, strategy,
                                                rt))
-        self.cohorts = [Cohort(rows, fleet.mesh)
+        self.cohorts = [Cohort(rows, fleet.mesh, health_every)
                         for rows in groups.values()]
         self._where: dict[int, tuple[Cohort, int]] = {}
         for c in self.cohorts:
@@ -360,6 +443,21 @@ class FleetSession:
         out = np.zeros(self.batch, bool)
         for c in self.cohorts:
             out[c.members] = c.converged
+        return out
+
+    @property
+    def quarantined(self) -> np.ndarray:
+        """(B,) networks frozen by the health screen, fleet order."""
+        out = np.zeros(self.batch, bool)
+        for c in self.cohorts:
+            out[c.members] = c.quarantined
+        return out
+
+    @property
+    def faults(self) -> list[dict]:
+        """Structured fault records from every cohort, by network."""
+        out = [f for c in self.cohorts for f in c.faults]
+        out.sort(key=lambda f: f["network"])
         return out
 
     def active_network(self, i: int) -> bool:
@@ -505,6 +603,37 @@ class FleetSession:
                 "qe": fs.qe[:B],
             }
         return tree
+
+    def network_snapshot(self, i: int) -> tuple[dict, dict]:
+        """Network i as a B=1 fleet checkpoint payload ``(tree, extra)``.
+
+        The layout matches what ``FleetSession(FleetSpec((spec_i,),
+        (seed_i,)))`` saves, so ``FleetSession.restore`` on that
+        single-network spec resumes network i alone. The serving
+        engine checkpoints each job this way: a poisoned or crashed
+        job retries from its own snapshot without dragging its
+        wave-mates along.
+        """
+        self._start()
+        c, local = self._where[i]
+        fs = c.fstate
+        sl = slice(local, local + 1)
+        nets = jax.tree.map(lambda x: x[sl],
+                            fs.nets.replace(rng=_key_data(fs.nets.rng)))
+        tree = {"cohort0": {
+            "nets": nets,
+            "rng": _key_data(fs.rng)[sl],
+            "iteration": fs.iteration[sl],
+            "converged": fs.converged[sl],
+            "qe": fs.qe[sl],
+        }}
+        extra = {
+            "iterations": [int(c.iterations[local])],
+            "converged": [bool(c.converged[local])],
+            "histories": [list(self.stats[i].history)],
+            "checkpoint_every": self.checkpoint_every,
+        }
+        return tree, extra
 
     def checkpoint(self, step: int | None = None) -> None:
         """Atomic snapshot via ``repro.checkpoint.manager``."""

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Generic, Iterator, TypeVar
 
 from repro.core.gson.multi import find_winners_reference
@@ -223,12 +224,49 @@ def resolve_backend(backend: str | Any | None) -> Backend:
     if isinstance(backend, Backend):
         return backend
     if isinstance(backend, str):
-        return BACKENDS.get(backend)()
+        factory = BACKENDS.get(backend)
+        try:
+            return factory()
+        except Exception as e:                  # noqa: BLE001
+            # a kernel backend whose construction fails (missing Pallas
+            # toolchain, import error in the kernel package) must not
+            # kill the run — the reference implements the same contract
+            warnings.warn(
+                f"backend {backend!r} failed to construct "
+                f"({type(e).__name__}: {e}); falling back to the "
+                "reference backend", RuntimeWarning, stacklevel=2)
+            return Backend("reference", find_winners_reference, None)
     if not callable(backend):
         raise TypeError(
             f"backend must be a registered name, a Backend, or a "
             f"FindWinnersFn; got {type(backend)!r}")
     return Backend("custom", find_winners=backend)
+
+
+def reference_fallback(find_winners, update_phase,
+                       err: BaseException) -> tuple | None:
+    """Recovery decision for a backend that failed to *lower* at first
+    use (compile/trace-time failure of a kernel program).
+
+    If ``(find_winners, update_phase)`` is already the pure-jnp
+    reference pair, the error cannot be a backend problem — returns
+    ``None`` and the caller re-raises. Otherwise warns and returns the
+    reference pair ``(find_winners_reference, None)`` for the caller to
+    swap in and retry; the reference implements the identical phase
+    contract, so the run proceeds with the same results, just slower.
+    Session and fleet drivers call this around their first step only —
+    lowering failures surface on the first call of a compiled program.
+    """
+    if ((find_winners is None or find_winners is find_winners_reference)
+            and update_phase is None):
+        return None
+    warnings.warn(
+        f"backend (find_winners={getattr(find_winners, '__name__', find_winners)!r}, "
+        f"update_phase={getattr(update_phase, '__name__', update_phase)!r}) "
+        f"failed to lower ({type(err).__name__}: {err}); falling back "
+        "to the reference backend for this run", RuntimeWarning,
+        stacklevel=3)
+    return find_winners_reference, None
 
 
 # ---------------------------------------------------------------------------

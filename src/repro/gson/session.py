@@ -45,6 +45,7 @@ import numpy as np
 from repro.checkpoint import manager as ckpt
 from repro.core.gson import fleet as fleet_core
 from repro.core.gson import metrics
+from repro.gson import registry
 from repro.gson.spec import RunSpec, resolve
 
 
@@ -108,6 +109,7 @@ class Session:
         self.converged = False
         self.checkpoint_every = checkpoint_every
         self._last_ckpt = -1
+        self._stepped = False
         self._mgr = (ckpt.CheckpointManager(checkpoint_dir, keep=keep)
                      if checkpoint_dir else None)
 
@@ -181,8 +183,25 @@ class Session:
                 max_iters = spec.max_iterations - self.iteration
                 if budget is not None:
                     max_iters = min(max_iters, budget - spent)
-                res = self.strategy.step(self.rt, self.state, self._rng,
-                                         self.iteration, max_iters)
+                try:
+                    res = self.strategy.step(self.rt, self.state,
+                                             self._rng, self.iteration,
+                                             max_iters)
+                except Exception as e:            # noqa: BLE001
+                    # first-call lowering failure of a kernel backend:
+                    # swap in the reference pair (identical results,
+                    # slower) and retry; anything else re-raises
+                    fb = (None if self._stepped
+                          else registry.reference_fallback(
+                              self.rt.find_winners,
+                              self.rt.update_phase, e))
+                    if fb is None:
+                        raise
+                    self.rt.find_winners, self.rt.update_phase = fb
+                    res = self.strategy.step(self.rt, self.state,
+                                             self._rng, self.iteration,
+                                             max_iters)
+                self._stepped = True
                 self.state, self._rng = res.state, res.rng
                 self.iteration += res.iterations
                 spent += res.iterations

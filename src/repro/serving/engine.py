@@ -19,12 +19,17 @@ size, not the network size.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import manager as ckpt_mgr
 from repro.models.registry import ModelBundle
 
 
@@ -165,7 +170,15 @@ class ServeEngine:
 
 @dataclass
 class ReconstructionJob:
-    """One queued/running reconstruction request."""
+    """One queued/running reconstruction request.
+
+    ``status`` walks ``queued -> running -> done``, with the
+    supervised detours ``retrying`` (faulted, waiting out its backoff)
+    and the terminal ``failed`` (retry budget exhausted; ``error``
+    holds the structured record) / ``budget_exhausted`` (the server's
+    ``run(max_ticks)`` ran out first). ``done`` stays the plain
+    "terminal" boolean for compatibility.
+    """
 
     jid: int
     spec: "object"                # repro.gson.RunSpec
@@ -174,6 +187,10 @@ class ReconstructionJob:
     session: "object | None" = None   # the FleetSession (or Session) serving it
     stats: "object | None" = None
     done: bool = False
+    status: str = "queued"
+    retries: int = 0
+    not_before_tick: int = 0      # backoff gate for the next retry
+    error: dict | None = None     # structured record of the last fault
 
 
 class ReconstructionServer:
@@ -205,26 +222,180 @@ class ReconstructionServer:
     each device owns whole networks (cohorts pad themselves when the
     wave does not divide the mesh), with zero per-iteration
     collectives and no change to any job's results.
+
+    **Supervision.** With ``checkpoint_dir`` set, every live job is
+    snapshotted on the slice cadence (``checkpoint_every_ticks``) into
+    its own ``job_<jid>/`` directory — B=1 fleet format via
+    ``FleetSession.network_snapshot``, so one job restores without its
+    wave-mates. A job that faults — its wave's advance raises, the
+    on-device health screen quarantines its network, a slice stalls
+    past ``tick_timeout_s``, or an injected failure fires — is pulled
+    out of its wave and *retried from its last valid checkpoint* with
+    exponential backoff (``backoff_ticks * 2**retries`` ticks), each
+    retry admitted as its own single-job wave so a poison job cannot
+    re-fault healthy neighbors. After ``max_retries`` retries the job
+    goes terminal ``failed`` with a structured ``error`` record and
+    the server keeps serving everyone else — graceful degradation, no
+    unhandled exception, and ``run`` cannot wedge: every loop turn
+    either advances a live wave or fast-forwards the tick clock to the
+    next backoff deadline, and ``max_ticks`` bounds the total.
+
+    ``injector`` (a ``repro.gson.faults.GsonFaultInjector``) drives
+    deterministic chaos for tests: poisoned state, crash-mid-
+    checkpoint, injected job failures, and device loss — the last
+    shrinks the server mesh and retires every sharded wave, whose jobs
+    then retry from checkpoint on the survivor mesh (elastic
+    resharding; retries from infrastructure faults are free).
     """
 
     def __init__(self, slots: int = 4, slice_iters: int = 50,
-                 mesh=None):
+                 mesh=None, *, checkpoint_dir: str | None = None,
+                 checkpoint_every_ticks: int = 1, max_retries: int = 2,
+                 backoff_ticks: int = 1, tick_timeout_s: float | None = None,
+                 injector=None, health_every: int = 1):
         self.slots = slots
         self.slice_iters = slice_iters
         self.mesh = mesh
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every_ticks = checkpoint_every_ticks
+        self.max_retries = max_retries
+        self.backoff_ticks = backoff_ticks
+        self.tick_timeout_s = tick_timeout_s
+        self.injector = injector
+        self.health_every = health_every
         self.queue: list[ReconstructionJob] = []
         self.finished: list[ReconstructionJob] = []
+        self.jobs: list[ReconstructionJob] = []     # every submit, ever
         self.ticks = 0
         self._next_jid = 0
         # live waves: (FleetSession, its jobs in network order)
         self._fleets: list[tuple[object, list[ReconstructionJob]]] = []
         self._solo: list[ReconstructionJob] = []      # legacy Session jobs
+        self._retry: list[ReconstructionJob] = []     # faulted, in backoff
+        self._mgrs: dict[int, ckpt_mgr.CheckpointManager] = {}
 
     def submit(self, spec, seed: int = 0) -> ReconstructionJob:
         job = ReconstructionJob(self._next_jid, spec, seed)
         self._next_jid += 1
         self.queue.append(job)
+        self.jobs.append(job)
         return job
+
+    # -- supervision helpers -------------------------------------------
+    def _mgr(self, jid: int) -> "ckpt_mgr.CheckpointManager | None":
+        if self.checkpoint_dir is None:
+            return None
+        if jid not in self._mgrs:
+            self._mgrs[jid] = ckpt_mgr.CheckpointManager(
+                os.path.join(self.checkpoint_dir, f"job_{jid}"), keep=3)
+        return self._mgrs[jid]
+
+    def _fault_job(self, job: ReconstructionJob, kind: str, detail,
+                   *, count: bool = True) -> None:
+        """Record a fault; requeue for retry or go terminal ``failed``.
+
+        ``count=False`` marks an infrastructure fault (device loss):
+        it neither spends the job's retry budget nor backs off.
+        """
+        job.error = {"job": job.jid, "kind": kind, "detail": str(detail),
+                     "tick": self.ticks, "retries": job.retries}
+        job.session = None
+        if count:
+            job.retries += 1
+        if job.retries > self.max_retries:
+            job.status = "failed"
+            job.done = True
+            self.finished.append(job)
+            return
+        job.status = "retrying"
+        back = (self.backoff_ticks * (2 ** max(job.retries - 1, 0))
+                if count else 0)
+        job.not_before_tick = self.ticks + back
+        self._retry.append(job)
+
+    def _checkpoint_jobs(self) -> None:
+        """Per-job snapshots on the slice cadence (quarantined networks
+        are never snapshotted — their last checkpoint predates the
+        poison, which is exactly what the retry restores)."""
+        if self.checkpoint_dir is None or not self.checkpoint_every_ticks:
+            return
+        if self.ticks % self.checkpoint_every_ticks:
+            return
+        for fleet, jobs in self._fleets:
+            q = fleet.quarantined
+            for i, job in enumerate(jobs):
+                if (job.status != "running" or job.session is not fleet
+                        or q[i]):
+                    continue
+                try:
+                    tree, extra = fleet.network_snapshot(i)
+                    self._mgr(job.jid).save(
+                        tree, int(extra["iterations"][0]), extra)
+                except Exception as e:          # noqa: BLE001
+                    # a failed snapshot (e.g. crash mid-publish) leaves
+                    # the previous valid one in place; serving goes on
+                    warnings.warn(
+                        f"job {job.jid}: checkpoint failed "
+                        f"({type(e).__name__}: {e}); previous snapshot "
+                        "remains the restore point", RuntimeWarning,
+                        stacklevel=2)
+        for job in self._solo:
+            if job.status != "running":
+                continue
+            if getattr(job.session, "_mgr", None) is None:
+                continue
+            try:
+                job.session.checkpoint()
+            except Exception as e:              # noqa: BLE001
+                warnings.warn(
+                    f"job {job.jid}: checkpoint failed "
+                    f"({type(e).__name__}: {e}); previous snapshot "
+                    "remains the restore point", RuntimeWarning,
+                    stacklevel=2)
+
+    def _inject(self) -> None:
+        """Fire this tick's scheduled faults (each fires once)."""
+        if self.injector is None:
+            return
+        events = self.injector.events_at(self.ticks)
+        if not events:
+            return
+        self.injector.pop(self.ticks)
+        from repro.gson import faults as gf
+        for ev in events:
+            kind = ev.get("kind")
+            if kind == "crash_checkpoint":
+                gf.arm_checkpoint_crash(ev.get("times", 1))
+            elif kind == "poison":
+                for fleet, jobs in self._fleets:
+                    for i, job in enumerate(jobs):
+                        if (job.jid == ev["job"]
+                                and job.status == "running"
+                                and job.session is fleet):
+                            gf.poison_network(fleet, i,
+                                              ev.get("poison", "nan"))
+            elif kind == "fail_job":
+                for job in list(self._live_jobs()):
+                    if job.jid == ev["job"]:
+                        self._fault_job(job, "injected_failure",
+                                        ev.get("detail", "injected"))
+            elif kind == "device_loss":
+                n = int(ev.get("survivors", 1))
+                if self.mesh is not None:
+                    self.mesh = dataclasses.replace(self.mesh, devices=n)
+                # every sharded wave dies with its devices; the jobs
+                # retry from checkpoint on the survivor mesh, free
+                for fleet, jobs in self._fleets:
+                    for job in jobs:
+                        if job.status == "running" and job.session is fleet:
+                            self._fault_job(
+                                job, "device_loss",
+                                f"mesh shrunk to {n} devices",
+                                count=False)
+                self._fleets = []
+            else:
+                warnings.warn(f"unknown injected fault {ev!r} ignored",
+                              RuntimeWarning, stacklevel=2)
 
     @staticmethod
     def _fleet_capable(spec) -> bool:
@@ -233,11 +404,71 @@ class ReconstructionServer:
                        False)
 
     def _live_jobs(self) -> list[ReconstructionJob]:
-        return ([j for _, jobs in self._fleets for j in jobs
-                 if not j.done]
-                + [j for j in self._solo if not j.done])
+        # a faulted job stays in its old wave's list until that wave
+        # drains; ``session`` identity says which wave owns it NOW
+        return ([j for f, jobs in self._fleets for j in jobs
+                 if j.status == "running" and j.session is f]
+                + [j for j in self._solo if j.status == "running"])
 
     def _admit(self, free: int):
+        """Fill freed capacity: eligible *retries* first (each its own
+        single-job wave, isolating a possibly-poison job), then queued
+        fresh jobs as one shared wave."""
+        for job in list(self._retry):
+            if free <= 0:
+                return
+            if self.ticks < job.not_before_tick:
+                continue
+            self._retry.remove(job)
+            try:
+                self._admit_retry(job)
+            except Exception as e:              # noqa: BLE001
+                self._fault_job(job, "admission_error", repr(e))
+                continue
+            free -= 1
+        self._admit_fresh(free)
+
+    def _admit_retry(self, job: ReconstructionJob) -> None:
+        """Resume one faulted job from its last valid checkpoint (fresh
+        from its seed when it never reached one — deterministic either
+        way) on the CURRENT server mesh, so a device-loss survivor
+        mesh is picked up automatically."""
+        from repro.gson import FleetSession, FleetSpec, Session
+        mgr = self._mgr(job.jid)
+        have_ckpt = mgr is not None and mgr.latest() is not None
+        if self._fleet_capable(job.spec):
+            fspec = FleetSpec((job.spec,), (job.seed,), self.mesh)
+
+            def route(row, job=job):
+                job.history.append(row)
+
+            if have_ckpt:
+                sess = FleetSession.restore(
+                    fspec, mgr.path, on_history=route,
+                    health_every=self.health_every)
+                job.history[:] = list(sess.stats[0].history)
+            else:
+                sess = FleetSession(fspec, on_history=route,
+                                    health_every=self.health_every)
+                job.history.clear()
+            job.session = sess
+            job.status = "running"
+            self._fleets.append((sess, [job]))
+        else:
+            if have_ckpt:
+                sess = Session.restore(job.spec, mgr.path,
+                                       on_history=job.history.append)
+                job.history[:] = list(sess.stats.history)
+            else:
+                sess = Session(job.spec, seed=job.seed,
+                               on_history=job.history.append,
+                               checkpoint_dir=(mgr.path if mgr else None))
+                job.history.clear()
+            job.session = sess
+            job.status = "running"
+            self._solo.append(job)
+
+    def _admit_fresh(self, free: int):
         """Admit up to ``free`` queued jobs: fleet-capable ones become
         ONE new FleetSession (stacked and compiled once, placed on the
         server mesh), the rest legacy Sessions.
@@ -267,10 +498,13 @@ class ReconstructionServer:
                 def route(row, jobs=fleet_jobs):
                     jobs[row["network"]].history.append(row)
 
-                fleet = FleetSession(fspec, on_history=route)
+                fleet = FleetSession(fspec, on_history=route,
+                                     health_every=self.health_every)
             solo_sessions = [
                 Session(j.spec, seed=j.seed,
-                        on_history=j.history.append)
+                        on_history=j.history.append,
+                        checkpoint_dir=(self._mgr(j.jid).path
+                                        if self.checkpoint_dir else None))
                 for j in solo_jobs]
         except Exception:
             self.queue[:0] = wave
@@ -278,41 +512,117 @@ class ReconstructionServer:
         if fleet is not None:
             for j in fleet_jobs:
                 j.session = fleet
+                j.status = "running"
             self._fleets.append((fleet, fleet_jobs))
         for j, sess in zip(solo_jobs, solo_sessions):
             j.session = sess
+            j.status = "running"
             self._solo.append(j)
 
     def step(self):
-        """One tick: refill freed slots, then advance every live slot."""
-        # drop fully-drained waves (all their networks finished)
+        """One tick: fire scheduled faults, refill freed slots, advance
+        every live wave under supervision, snapshot the survivors."""
+        self._inject()
+        # drop waves with no running jobs left (drained or all faulted)
         self._fleets = [(f, jobs) for f, jobs in self._fleets
-                        if any(not j.done for j in jobs)]
-        self._solo = [j for j in self._solo if not j.done]
+                        if any(j.status == "running" and j.session is f
+                               for j in jobs)]
+        self._solo = [j for j in self._solo if j.status == "running"]
         free = self.slots - len(self._live_jobs())
-        if free > 0 and self.queue:
+        if free > 0 and (self.queue or self._retry):
             self._admit(free)
         if not self._live_jobs():
+            waiting = [j.not_before_tick for j in self._retry]
+            if waiting:
+                # everyone is in backoff: fast-forward the clock so the
+                # run loop spends one turn, not one per idle tick
+                self.ticks = max(self.ticks + 1, min(waiting))
             return
         self.ticks += 1
-        for fleet, jobs in self._fleets:
-            fleet.run(budget=self.slice_iters)
+        for fleet, jobs in list(self._fleets):
+            t0 = time.perf_counter()
+            try:
+                fleet.run(budget=self.slice_iters)
+            except Exception as e:              # noqa: BLE001
+                self._fleets.remove((fleet, jobs))
+                for job in jobs:
+                    if job.status == "running" and job.session is fleet:
+                        self._fault_job(job, "advance_error", repr(e))
+                continue
+            dt = time.perf_counter() - t0
+            if (self.tick_timeout_s is not None
+                    and dt > self.tick_timeout_s):
+                self._fleets.remove((fleet, jobs))
+                for job in jobs:
+                    if job.status == "running" and job.session is fleet:
+                        self._fault_job(
+                            job, "stall",
+                            f"slice took {dt:.2f}s > "
+                            f"{self.tick_timeout_s:.2f}s")
+                continue
+            quarantined = fleet.quarantined
+            recs = {f["network"]: f for f in fleet.faults}
             for i, job in enumerate(jobs):
-                if not job.done and not fleet.active_network(i):
+                if job.status != "running" or job.session is not fleet:
+                    continue
+                if quarantined[i]:
+                    # the network froze in place; the job retries from
+                    # its last pre-poison checkpoint in its own wave
+                    self._fault_job(
+                        job, "unhealthy_state",
+                        recs.get(i, {}).get("detail", "quarantined"))
+                elif not fleet.active_network(i):
                     _, job.stats = fleet.result(i)
                     job.done = True
+                    job.status = "done"
                     self.finished.append(job)
-        for job in self._solo:
-            if job.done:
+        for job in list(self._solo):
+            if job.status != "running":
                 continue
-            job.session.run(budget=self.slice_iters)
+            t0 = time.perf_counter()
+            try:
+                job.session.run(budget=self.slice_iters)
+            except Exception as e:              # noqa: BLE001
+                self._solo.remove(job)
+                self._fault_job(job, "advance_error", repr(e))
+                continue
+            dt = time.perf_counter() - t0
+            if (self.tick_timeout_s is not None
+                    and dt > self.tick_timeout_s):
+                self._solo.remove(job)
+                self._fault_job(
+                    job, "stall", f"slice took {dt:.2f}s > "
+                    f"{self.tick_timeout_s:.2f}s")
+                continue
             if not job.session.active:
                 _, job.stats = job.session.result()
                 job.done = True
+                job.status = "done"
                 self.finished.append(job)
+        self._checkpoint_jobs()
 
     def run(self, max_ticks: int = 10_000) -> list[ReconstructionJob]:
-        while (self.queue or self._live_jobs()) and max_ticks > 0:
+        """Serve until every job is terminal, or ``max_ticks`` elapse.
+
+        Returns EVERY submitted-but-unreturned job with a terminal
+        status: ``done``, ``failed`` (retry budget spent — see
+        ``job.error``), or ``budget_exhausted`` for jobs still queued /
+        retrying / running when the tick budget ran out — nothing is
+        silently dropped. A later ``run`` call picks the
+        ``budget_exhausted`` ones back up where they stopped.
+        """
+        for job in self.jobs:
+            if job.status == "budget_exhausted":    # resuming
+                job.status = ("queued" if job in self.queue
+                              else "retrying" if job in self._retry
+                              else "running")
+        while (self.queue or self._retry
+               or self._live_jobs()) and max_ticks > 0:
             self.step()
             max_ticks -= 1
-        return self.finished
+        out = list(self.finished)
+        for job in self.queue + self._retry + self._live_jobs():
+            if not job.done:
+                job.status = "budget_exhausted"
+                out.append(job)
+        return out

@@ -112,5 +112,7 @@ def test_manifest_is_valid_json(tmp_path):
     with open(tmp_path / "step_00000012" / "manifest.json") as f:
         man = json.load(f)
     assert man["step"] == 12
-    assert man["format"] == 1
+    # format 2 added the per-leaf shape/dtype spec restore validates
+    assert man["format"] == 2
+    assert set(man["leaves"]) == set(man["keys"])
     assert len(man["keys"]) == 4

@@ -1,0 +1,364 @@
+"""Fault tolerance: injection, quarantine, retry, elastic recovery.
+
+Every fault here is injected deterministically (``repro.gson.faults``)
+into the real production code path, and every assertion is about the
+*recovery*: orphaned checkpoints are ignored and collected, corrupt
+ones fall back, poisoned networks quarantine while their wave-mates
+finish bit-identically, faulted serving jobs retry from checkpoint
+with backoff (or fail with a structured error after the budget), a
+lowering-failure backend falls back to the reference, and a fleet that
+loses devices reshard-restores with surviving networks bit-identical
+to a no-failure run.
+"""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.core.gson.sampling import make_sampler
+from repro.gson import (FaultySampler, FleetSession, FleetSpec, GSONParams,
+                        GsonFaultInjector, RunSpec, Session, SimulatedCrash,
+                        checkpoint_crash, lowering_failure_backend,
+                        poison_network, run)
+from repro.gson.registry import BACKENDS, resolve_backend
+from repro.serving.engine import ReconstructionServer
+
+
+def _spec(iters: int = 200, **kw) -> RunSpec:
+    return RunSpec(variant="multi", sampler="sphere", capacity=64,
+                   model=GSONParams(model="gwr", insertion_threshold=0.5),
+                   max_iterations=iters, **kw)
+
+
+def _same_network(a, b) -> bool:
+    return (np.array_equal(np.asarray(a.w), np.asarray(b.w))
+            and np.array_equal(np.asarray(a.nbr), np.asarray(b.nbr))
+            and np.array_equal(np.asarray(a.error), np.asarray(b.error))
+            and int(a.signal_count) == int(b.signal_count))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hygiene
+
+
+def test_crash_mid_checkpoint_orphan_ignored_and_collected(tmp_path):
+    d = str(tmp_path)
+    sess = Session(_spec(), seed=0, checkpoint_dir=d)
+    sess.run(budget=50)
+    sess.checkpoint()
+    sess.run(budget=50)
+    with checkpoint_crash():
+        with pytest.raises(SimulatedCrash):
+            sess.checkpoint()
+    # the crash died between fsync and rename: orphan present,
+    # published history intact
+    assert any(x.endswith(".tmp") for x in os.listdir(d))
+    assert ckpt.latest(d) == 50
+    assert ckpt.valid_steps(d) == [50]
+    # gc_orphans deletes the orphan (the CheckpointManager default)
+    assert ckpt.latest(d, gc_orphans=True) == 50
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+    # restore-and-resume is bit-identical to an uninterrupted run
+    res = Session.restore(_spec(), d)
+    assert res.iteration == 50
+    res.run()
+    ref = Session(_spec(), seed=0)
+    ref.run()
+    assert _same_network(res.state, ref.state)
+
+
+def test_corrupt_checkpoint_falls_back_to_previous_valid(tmp_path):
+    d = str(tmp_path)
+    sess = Session(_spec(), seed=3, checkpoint_dir=d, keep=5)
+    sess.run(budget=50)
+    sess.checkpoint()
+    sess.run(budget=50)
+    sess.checkpoint()
+    assert ckpt.valid_steps(d) == [50, 100]
+    with open(os.path.join(d, "step_00000100", "arrays.npz"), "wb") as f:
+        f.write(b"not an npz file")
+    with pytest.warns(RuntimeWarning, match="failed validation"):
+        res = Session.restore(_spec(), d)
+    assert res.iteration == 50
+    # an explicitly requested corrupt step raises a descriptive error
+    with pytest.raises(ValueError, match="corrupt array file"):
+        ckpt.restore(d, res._savable_tree(), step=100)
+
+
+def test_manifest_shape_mismatch_is_caught(tmp_path):
+    d = str(tmp_path)
+    sess = Session(_spec(), seed=1, checkpoint_dir=d, keep=5)
+    sess.run(budget=50)
+    sess.checkpoint()
+    sess.run(budget=50)
+    sess.checkpoint()
+    # tamper with the newest manifest's per-leaf spec: the restore
+    # self-check must reject it and fall back
+    import json
+    mpath = os.path.join(d, "step_00000100", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    k = sorted(manifest["leaves"])[0]
+    manifest["leaves"][k]["shape"] = [1]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.warns(RuntimeWarning, match="failed validation"):
+        res = Session.restore(_spec(), d)
+    assert res.iteration == 50
+
+
+# ---------------------------------------------------------------------------
+# quarantine
+
+
+@pytest.mark.parametrize("kind", ["nan", "topology"])
+def test_poisoned_network_quarantines_others_bit_identical(kind):
+    clean = FleetSession(FleetSpec.broadcast(_spec(), seeds=range(4)))
+    clean.run()
+    fs = FleetSession(FleetSpec.broadcast(_spec(), seeds=range(4)))
+    fs.run(budget=60)
+    poison_network(fs, 2, kind)
+    fs.run()
+    assert fs.quarantined.tolist() == [False, False, True, False]
+    faults = fs.faults
+    assert faults and faults[0]["network"] == 2
+    assert faults[0]["kind"] == "unhealthy_state"
+    # the poisoned network froze right after the screen caught it ...
+    assert fs.iterations[2] < fs.iterations[0]
+    # ... and its wave-mates never felt it
+    for i in (0, 1, 3):
+        a, _ = clean.result(i)
+        b, _ = fs.result(i)
+        assert _same_network(a, b), f"network {i} diverged"
+
+
+def test_health_screen_can_be_disabled():
+    fs = FleetSession(FleetSpec.broadcast(_spec(iters=100),
+                                          seeds=range(2)),
+                      health_every=0)
+    fs.run(budget=50)
+    poison_network(fs, 0, "nan")
+    fs.run(budget=10)
+    assert fs.quarantined.tolist() == [False, False]  # nobody screening
+
+
+# ---------------------------------------------------------------------------
+# backend lowering failure -> reference fallback
+
+
+def test_lowering_failure_falls_back_to_reference():
+    ref_state, _ = run(_spec(iters=100), seed=0)
+    broken = _spec(iters=100).replace(backend=lowering_failure_backend())
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        st, stats = run(broken, seed=0)
+    assert _same_network(st, ref_state)
+    assert stats.iterations == 100
+
+
+def test_lowering_failure_falls_back_in_fleet():
+    ref = FleetSession(FleetSpec.broadcast(_spec(iters=100),
+                                           seeds=range(2)))
+    ref.run()
+    broken = _spec(iters=100).replace(backend=lowering_failure_backend())
+    fs = FleetSession(FleetSpec.broadcast(broken, seeds=range(2)))
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        fs.run()
+    for i in range(2):
+        a, _ = ref.result(i)
+        b, _ = fs.result(i)
+        assert _same_network(a, b)
+
+
+def test_backend_construction_failure_falls_back():
+    BACKENDS.register(
+        "broken-for-test",
+        lambda: (_ for _ in ()).throw(ImportError("no toolchain")))
+    with pytest.warns(RuntimeWarning, match="failed to construct"):
+        be = resolve_backend("broken-for-test")
+    assert be.name == "reference"
+
+
+# ---------------------------------------------------------------------------
+# serving supervision
+
+
+def test_serving_poison_retries_from_checkpoint(tmp_path):
+    spec = _spec(iters=300)
+    inj = GsonFaultInjector({2: {"kind": "poison", "job": 1},
+                             3: {"kind": "crash_checkpoint"}})
+    srv = ReconstructionServer(slots=4, slice_iters=50,
+                               checkpoint_dir=str(tmp_path),
+                               injector=inj, max_retries=2,
+                               backoff_ticks=1)
+    jobs = [srv.submit(spec, seed=s) for s in range(3)]
+    with warnings.catch_warnings():
+        # the injected checkpoint crash degrades with a warning
+        warnings.simplefilter("ignore", RuntimeWarning)
+        done = srv.run(max_ticks=100)
+    assert {j.jid for j in done} == {0, 1, 2}
+    assert all(j.status == "done" for j in jobs)
+    # the poisoned job took exactly one supervised retry ...
+    assert jobs[1].retries == 1
+    assert jobs[1].error["kind"] == "unhealthy_state"
+    assert jobs[1].error["job"] == 1
+    # ... the healthy ones none
+    assert jobs[0].retries == 0 and jobs[2].retries == 0
+    # the retried job's result is bit-identical to a fault-free run
+    ref_srv = ReconstructionServer(slots=1, slice_iters=50)
+    ref = ref_srv.submit(spec, seed=1)
+    ref_srv.run(max_ticks=100)
+    assert jobs[1].stats.units == ref.stats.units
+    assert (jobs[1].stats.quantization_error
+            == ref.stats.quantization_error)
+    assert jobs[1].stats.iterations == ref.stats.iterations
+
+
+def test_serving_exhausts_retry_budget_to_structured_failure():
+    spec = _spec(iters=300)
+    always_failing = spec.replace(
+        sampler=FaultySampler(make_sampler("sphere"), fail_times=99))
+    srv = ReconstructionServer(slots=2, slice_iters=50, max_retries=1,
+                               backoff_ticks=1)
+    bad = srv.submit(always_failing, seed=0)
+    good = srv.submit(spec, seed=1)
+    done = srv.run(max_ticks=100)            # must NOT raise
+    assert {j.jid for j in done} == {bad.jid, good.jid}
+    assert good.status == "done"
+    assert bad.status == "failed" and bad.done
+    assert bad.retries == 2                  # initial try + 1 retry
+    assert bad.error["kind"] == "advance_error"
+    assert "injected sampler failure" in bad.error["detail"]
+
+
+def test_serving_sampler_recovers_after_transient_failure():
+    spec = _spec(iters=200)
+    flaky = spec.replace(
+        sampler=FaultySampler(make_sampler("sphere"), fail_times=1))
+    srv = ReconstructionServer(slots=1, slice_iters=50, max_retries=2,
+                               backoff_ticks=1)
+    job = srv.submit(flaky, seed=0)
+    srv.run(max_ticks=100)
+    assert job.status == "done"
+    assert job.retries == 1
+    # trace-time failure consumed no signals: same result as fault-free
+    ref_state, _ = run(spec, seed=0)
+    assert job.stats.units == int(ref_state.n_active)
+
+
+def test_serving_run_returns_terminal_status_for_every_job():
+    spec = _spec(iters=300)
+    srv = ReconstructionServer(slots=1, slice_iters=10)
+    a = srv.submit(spec, seed=0)
+    b = srv.submit(spec, seed=1)
+    out = srv.run(max_ticks=2)
+    # nothing dropped: both jobs come back, marked
+    assert {j.jid for j in out} == {a.jid, b.jid}
+    assert {j.status for j in out} == {"budget_exhausted"}
+    # a later run picks them back up to completion
+    out2 = srv.run(max_ticks=1000)
+    assert {j.jid for j in out2} == {a.jid, b.jid}
+    assert all(j.status == "done" for j in out2)
+
+
+def test_serving_stall_detector_faults_wedged_job():
+    spec = _spec(iters=200)
+    slow = spec.replace(
+        sampler=FaultySampler(make_sampler("sphere"), hang_s=0.5))
+    srv = ReconstructionServer(slots=1, slice_iters=50, max_retries=0,
+                               tick_timeout_s=0.05)
+    job = srv.submit(slow, seed=0)
+    srv.run(max_ticks=20)                    # returns instead of wedging
+    assert job.status == "failed"
+    assert job.error["kind"] == "stall"
+
+
+# ---------------------------------------------------------------------------
+# elastic fleet recovery (multi-device, subprocess)
+
+
+@pytest.mark.slow
+def test_device_loss_reshard_restore_bit_identical(devices8):
+    out = devices8("""
+    import tempfile
+    import numpy as np
+    from repro.core.gson.state import GSONParams
+    from repro.ft.elastic import FailureInjector
+    from repro.gson.elastic import ElasticFleetRunner
+    from repro.gson.fleet import FleetSpec
+    from repro.gson.spec import MeshSpec, RunSpec
+
+    spec = RunSpec(variant="multi", sampler="sphere", capacity=64,
+                   model=GSONParams(model="gwr", insertion_threshold=0.5),
+                   max_iterations=150)
+
+    def fspec():
+        return FleetSpec.broadcast(
+            spec, seeds=range(8),
+            mesh=MeshSpec(axis="network", devices=8))
+
+    with tempfile.TemporaryDirectory() as d0, \\
+            tempfile.TemporaryDirectory() as d1:
+        r0 = ElasticFleetRunner(fspec(), d0, tick_iters=25)
+        s0 = r0.run()
+        assert r0.restarts == 0
+        r1 = ElasticFleetRunner(
+            fspec(), d1, tick_iters=25,
+            injector=FailureInjector({2: ["pod6_down", "pod7_down"]}))
+        s1 = r1.run()
+        assert r1.restarts == 1, r1.log
+        assert r1.fspec.mesh.ndev() == 6
+        for i in range(8):
+            a, _ = s0.result(i)
+            b, _ = s1.result(i)
+            assert np.array_equal(np.asarray(a.w), np.asarray(b.w)), i
+            assert np.array_equal(np.asarray(a.nbr),
+                                  np.asarray(b.nbr)), i
+            assert int(a.signal_count) == int(b.signal_count), i
+        print("RESHARD-OK", r1.log[0]["restore_s"] > 0)
+    """, n_devices=8)
+    assert "RESHARD-OK" in out
+
+
+@pytest.mark.slow
+def test_serving_device_loss_retries_on_survivor_mesh(devices8):
+    out = devices8("""
+    import tempfile
+    from repro.core.gson.state import GSONParams
+    from repro.gson import GsonFaultInjector, MeshSpec, RunSpec
+    from repro.serving.engine import ReconstructionServer
+
+    spec = RunSpec(variant="multi", sampler="sphere", capacity=64,
+                   model=GSONParams(model="gwr", insertion_threshold=0.5),
+                   max_iterations=200)
+    with tempfile.TemporaryDirectory() as d:
+        inj = GsonFaultInjector({2: {"kind": "device_loss",
+                                     "survivors": 4}})
+        srv = ReconstructionServer(
+            slots=4, slice_iters=50, checkpoint_dir=d, injector=inj,
+            mesh=MeshSpec(axis="network", devices=8))
+        jobs = [srv.submit(spec, seed=s) for s in range(4)]
+        srv.run(max_ticks=100)
+        assert all(j.status == "done" for j in jobs), [
+            (j.jid, j.status, j.error) for j in jobs]
+        # device loss is an infrastructure fault: free retries
+        assert all(j.retries == 0 for j in jobs)
+        assert srv.mesh.ndev() == 4
+        ref = ReconstructionServer(slots=4, slice_iters=50)
+        refs = [ref.submit(spec, seed=s) for s in range(4)]
+        ref.run(max_ticks=100)
+        for j, r in zip(jobs, refs):
+            assert j.stats.units == r.stats.units, j.jid
+            assert (j.stats.quantization_error
+                    == r.stats.quantization_error), j.jid
+        print("SERVING-ELASTIC-OK")
+    """, n_devices=8)
+    assert "SERVING-ELASTIC-OK" in out
+
+
+def test_elastic_runner_requires_mesh(tmp_path):
+    from repro.gson import ElasticFleetRunner
+    with pytest.raises(ValueError, match="network-sharded"):
+        ElasticFleetRunner(
+            FleetSpec.broadcast(_spec(), seeds=range(2)), str(tmp_path))
