@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.gson.index import build_index, find_winners_indexed
+from repro.ann import indexed_find_winners
 from repro.core.gson.multi import find_winners_reference
 from repro.core.gson.sampling import make_sampler
 from repro.utils.timing import timed
@@ -34,11 +34,10 @@ def bench_at_size(n_units: int, m: int = 1024, capacity: int = 16384):
     one = signals[:1]
     _, t1 = timed(fw1, one, w, active, n=30, warmup=2)
 
-    # indexed single-signal
-    bbox_min = jnp.asarray([-3.0] * 3)
-    cell = jnp.asarray(6.0 / 24, jnp.float32)
-    idx = build_index(w, active, bbox_min, cell, (24, 24, 24))
-    fwi = jax.jit(lambda s, w, a: find_winners_indexed(idx, 24, s, w, a))
+    # indexed single-signal (repro.ann grid, the paper's baseline mode)
+    grid = indexed_find_winners(bbox=((-3.0,) * 3, (3.0,) * 3))
+    idx = grid.build(w, active)
+    fwi = jax.jit(lambda s, w, a: grid(s, w, a, aux=idx))
     _, ti = timed(fwi, one, w, active, n=30, warmup=2)
 
     # multi-signal batched (per-signal time = batch time / m)

@@ -24,7 +24,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma list: convergence,phase,per_signal,"
                          "update,superstep,roofline,variants,fleet,mesh,"
-                         "faults")
+                         "faults,ann")
     ap.add_argument("--out", default=BENCH_JSON,
                     help="aggregate JSON path (default: repo root)")
     args = ap.parse_args(argv)
@@ -49,6 +49,11 @@ def main(argv=None):
     if want("superstep"):
         from benchmarks import bench_superstep
         results["superstep"] = bench_superstep.run()
+    if want("ann"):
+        # approximate Find Winners crossover vs the exact dense scan;
+        # speedup_ann_* keys gate nightly at >=64k units
+        from benchmarks import ann_matrix
+        results["ann_matrix"] = ann_matrix.run(budget=args.budget)
     if want("variants"):
         # enumerated from repro.gson.VARIANTS: newly registered variants
         # appear in BENCH_gson.json without touching the benchmarks

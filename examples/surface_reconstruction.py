@@ -85,6 +85,13 @@ def build_spec(args, *, signal_mesh: bool = False) -> gson.RunSpec:
         variant = "multi"
         if backend == "reference":      # only the untouched default
             backend = "pallas"
+    if args.recall_target is not None:
+        if backend not in ("ann-windowed", "ann-grid"):
+            raise SystemExit(
+                "--recall-target tunes the approximate backends; pair "
+                "it with --backend ann-windowed or ann-grid")
+        # a concrete Backend object rides the spec in place of a name
+        backend = gson.ann_backend(backend, args.recall_target)
     vcfg = None
     if variant == "multi-fused":
         vcfg = gson.FusedConfig(
@@ -176,6 +183,11 @@ def main(argv=None):
                     choices=sorted(gson.BACKENDS.names()),
                     help="per-phase device kernels (Find Winners + "
                          "dense Update) — see docs/api.md")
+    ap.add_argument("--recall-target", type=float, default=None,
+                    metavar="R",
+                    help="top-2 recall target for the ann-* backends "
+                         "(sizes the shortlist via the birthday-"
+                         "collision model, e.g. 0.95 -> 20 windows)")
     ap.add_argument("--superstep", type=int, default=64,
                     help="iterations per device call (multi-fused)")
     ap.add_argument("--mesh", type=int, default=0, metavar="D",

@@ -1,0 +1,68 @@
+"""repro.ann: recall-tunable approximate Find Winners.
+
+The paper's Find Winners phase is an exact top-2 over the full
+``(m, capacity)`` distance matrix — its own scaling wall (Sec. 2.5).
+This package provides two sub-linear, recall-tunable replacements that
+plug into the same ``FindWinnersFn`` slot every exact backend uses:
+
+  * :class:`~repro.ann.windowed.WindowedFindWinners` (``ann-windowed``)
+    — the MXU-friendly windowed top-k of ``jax.experimental.ann``:
+    partition the capacity axis into L windows, take per-window top-1
+    via dense contractions, then run the exact top-2 rerank over the L
+    shortlisted candidates. L is derived from a ``recall_target`` knob
+    by the birthday-collision recall model (:mod:`repro.ann.recall`).
+
+  * :class:`~repro.ann.grid.GridFindWinners` (``ann-grid`` /
+    ``indexed``) — the paper's hash-grid coarse quantizer (Sec. 3.1):
+    bucket units into a uniform grid, shortlist the signal's 3^d-cell
+    stencil, exact-rerank the shortlist. The grid is an explicit *aux*
+    pytree rebuilt on the topology-refresh cadence, so it composes
+    with the fused superstep and the fleet programs (see the
+    "stateful backend" protocol below).
+
+Both are *approximate*: the winner pair they return may differ from
+the exact backend's on a small fraction of signals (1 - recall). They
+are accepted on **topology quality** — Euler characteristic equal to
+the exact backend's and quantization error within tolerance
+(:func:`repro.core.gson.metrics.topology_quality`) — not on bitwise
+parity. The exact *rerank* stage (:func:`repro.ann.rerank.exact_top2`)
+does, however, share the reference/Pallas tie-break contract bitwise:
+lowest id among tied minima, winner excluded from the second pass,
+degenerate rows duplicate the winner.
+
+Stateful backend protocol
+-------------------------
+A backend with precomputed search structure declares ``stateful =
+True`` and provides ``build(w, active) -> aux`` (a pytree) plus
+``__call__(signals, w, active, aux=None)``. Call sites that cannot
+carry the aux pass nothing — the backend rebuilds internally, which is
+always correct, just slower. The fused superstep and the fleet
+superstep carry the aux in their loop state and rebuild it on the
+``refresh_every`` cadence (``multi.py`` / ``superstep.py`` /
+``fleet.py``), the device-side analogue of the paper's incremental
+index maintenance in the Update phase.
+"""
+from __future__ import annotations
+
+from repro.ann.grid import (GridAux, GridFindWinners, build_grid, cell_ids,
+                            grid_find_winners, grid_search,
+                            indexed_find_winners, indexed_scan)
+from repro.ann.recall import expected_recall, shortlist_size
+from repro.ann.rerank import exact_top2
+from repro.ann.windowed import WindowedFindWinners, windowed_find_winners
+
+__all__ = [
+    "GridAux",
+    "GridFindWinners",
+    "WindowedFindWinners",
+    "build_grid",
+    "cell_ids",
+    "exact_top2",
+    "expected_recall",
+    "grid_find_winners",
+    "grid_search",
+    "indexed_find_winners",
+    "indexed_scan",
+    "shortlist_size",
+    "windowed_find_winners",
+]

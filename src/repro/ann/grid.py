@@ -1,0 +1,354 @@
+"""Hash-grid coarse quantizer (the ``ann-grid`` / ``indexed`` backends).
+
+The paper's *Indexed* search (Sec. 3.1, after Hockney & Eastwood),
+absorbed from the orphaned ``core/gson/index.py`` seed sketch and
+rebuilt as a first-class two-stage backend: a uniform grid of cubes
+quantizes the units (counting sort -> CSR buckets); each signal
+shortlists its cell's 3^d stencil and the exact top-2 rerank
+(:func:`repro.ann.rerank.exact_top2`) runs over the shortlist. Like
+the paper's version it is "slightly approximate": the nearest unit can
+live outside the stencil when cells are small relative to unit
+spacing.
+
+Three fallback disciplines for signals the stencil cannot cover:
+
+  * ``"guard"`` (the ``ann-grid`` backend) — the guaranteed-coverage
+    radius test. Geometry: any unit within one cell width of a signal
+    lies inside the signal's 3^d stencil, so when the shortlist's
+    second distance is below ``cell`` (and distinct from the winner),
+    the true top-2 provably lives in the shortlist and the answer is
+    exact. One batch-level ``lax.cond`` re-runs the exhaustive
+    reference search when ANY signal violates the guard: on sparse
+    growing networks (unit spacing > cell) that is nearly every batch,
+    so growth dynamics match the exact backend by construction; on
+    dense converged pools — the regime the crossover targets — the
+    guard virtually never fires and the O(stencil) path runs alone.
+    The residual approximation is ``per_cell_cap`` overflow (a capped
+    bucket can hide a candidate the radius test cannot see), which is
+    what keeps acceptance quality-based rather than bitwise.
+  * ``"anchors"`` — a fixed block of *anchor* units (the first
+    ``n_anchors`` entries of the cell-sorted order, i.e. active units
+    spread across occupied cells) is appended to every shortlist.
+    Branchless, no fallback: the pure approximate regime
+    ``benchmarks/ann_matrix.py`` measures recall on.
+  * ``"exact"`` (the ``indexed`` baseline) — the paper's discipline: a
+    per-signal ``lax.cond`` re-runs the exhaustive reference search
+    when the stencil yields < 2 candidates. Faithful, but the
+    data-dependent branch costs dispatch divergence.
+
+The grid is the package's *stateful* backend: ``build`` returns a
+:class:`GridAux` pytree that loop drivers carry and rebuild on the
+topology-refresh cadence (the batched analogue of the paper's
+incremental in-Update index maintenance); calling with ``aux=None``
+rebuilds in place, which is always correct.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann.recall import shortlist_size
+from repro.ann.rerank import BIG_ID, exact_top2
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("origin", "cell", "sorted_units", "cell_start"),
+         meta_fields=("dims",))
+@dataclass
+class GridAux:
+    """The quantizer state: CSR buckets of unit ids, cell-sorted."""
+
+    origin: jax.Array        # (dim,) grid origin (bbox min)
+    cell: jax.Array          # () cube edge length
+    sorted_units: jax.Array  # (capacity,) unit ids sorted by cell id
+    cell_start: jax.Array    # (n_cells + 1,) CSR offsets
+    dims: tuple              # (g,) * dim, static
+
+
+def _strides(dims: tuple) -> tuple:
+    """Row-major flat-index strides for a ``dims`` grid."""
+    out, acc = [], 1
+    for g in reversed(dims):
+        out.append(acc)
+        acc *= g
+    return tuple(reversed(out))
+
+
+def cell_ids(points: jax.Array, origin: jax.Array, cell: jax.Array,
+             dims: tuple) -> jax.Array:
+    """(n, dim) points -> (n,) flat cell ids (clipped into the grid)."""
+    ijk = jnp.floor((points - origin[None, :]) / cell).astype(jnp.int32)
+    hi = jnp.asarray([g - 1 for g in dims], jnp.int32)
+    ijk = jnp.clip(ijk, 0, hi)
+    strides = jnp.asarray(_strides(dims), jnp.int32)
+    return jnp.sum(ijk * strides[None, :], axis=1)
+
+
+def _stencil_offsets(dims: tuple) -> jax.Array:
+    """(3^d,) flat-id offsets of the cell-plus-neighbors stencil."""
+    strides = _strides(dims)
+    offs = [sum(o * s for o, s in zip(combo, strides))
+            for combo in itertools.product((-1, 0, 1), repeat=len(dims))]
+    return jnp.asarray(offs, jnp.int32)
+
+
+def build_grid(w: jax.Array, active: jax.Array, dims: tuple,
+               bbox: tuple | None = None) -> GridAux:
+    """Quantize the unit pool: counting sort by cell id -> CSR buckets.
+
+    ``bbox = ((lo,)*dim, (hi,)*dim)`` fixes the grid frame; ``None``
+    derives it from the active units (the frame then tracks the
+    network, so a fixed data bbox is never needed). Inactive units sort
+    past the last cell and never enter a bucket.
+    """
+    if bbox is not None:
+        lo = jnp.asarray(bbox[0], jnp.float32)
+        hi = jnp.asarray(bbox[1], jnp.float32)
+    else:
+        any_active = jnp.any(active)
+        col = active[:, None]
+        lo = jnp.where(any_active,
+                       jnp.min(jnp.where(col, w, jnp.inf), axis=0), 0.0)
+        hi = jnp.where(any_active,
+                       jnp.max(jnp.where(col, w, -jnp.inf), axis=0), 1.0)
+    extent = jnp.maximum(jnp.max(hi - lo), 1e-6)
+    cell = (extent / dims[0] + 1e-6).astype(jnp.float32)
+    n_cells = math.prod(dims)
+    cid = cell_ids(w, lo, cell, dims)
+    cid = jnp.where(active, cid, n_cells)      # inactive sort to the end
+    order = jnp.argsort(cid, stable=True).astype(jnp.int32)
+    starts = jnp.searchsorted(cid[order],
+                              jnp.arange(n_cells + 1)).astype(jnp.int32)
+    return GridAux(origin=lo, cell=cell, sorted_units=order,
+                   cell_start=starts, dims=dims)
+
+
+def grid_search(aux: GridAux, signals: jax.Array, w: jax.Array,
+                active: jax.Array, *, per_cell_cap: int,
+                n_anchors: int = 0):
+    """Batched stencil shortlist + exact rerank (no data-dependent
+    branches). Returns the ``FindWinnersFn`` 4-tuple."""
+    m = signals.shape[0]
+    C = w.shape[0]
+    n_cells = math.prod(aux.dims)
+    offs = _stencil_offsets(aux.dims)                       # (3^d,)
+    sig_cell = cell_ids(signals, aux.origin, aux.cell, aux.dims)
+    cells = jnp.clip(sig_cell[:, None] + offs[None, :], 0, n_cells - 1)
+    start = aux.cell_start[cells]                           # (m, 3^d)
+    count = aux.cell_start[cells + 1] - start
+    take = jnp.minimum(count, per_cell_cap)
+    pos = start[..., None] + jnp.arange(per_cell_cap)[None, None, :]
+    valid = jnp.arange(per_cell_cap)[None, None, :] < take[..., None]
+    cand = jnp.where(valid,
+                     aux.sorted_units[jnp.clip(pos, 0, C - 1)],
+                     -1).reshape(m, -1)                     # (m, 3^d*cap)
+    if n_anchors:
+        # the first n_anchors cell-sorted entries are active units
+        # spread across occupied cells (inactive sort past them); any
+        # surplus slots alias active units already present -> the
+        # duplicate-id-aware rerank absorbs them
+        anchors = aux.sorted_units[:n_anchors]
+        cand = jnp.concatenate(
+            [cand, jnp.broadcast_to(anchors[None, :], (m, n_anchors))],
+            axis=1)
+    safe = jnp.clip(cand, 0, C - 1)
+    d2 = jnp.sum((signals[:, None, :] - w[safe]) ** 2, axis=-1)
+    d2 = jnp.where((cand >= 0) & active[safe], d2, jnp.inf)
+    ids = jnp.where(cand >= 0, cand, BIG_ID).astype(jnp.int32)
+    return exact_top2(d2, ids)
+
+
+@dataclass(frozen=True)
+class GridFindWinners:
+    """A stateful ``FindWinnersFn``: hash-grid quantizer -> shortlist
+    -> exact rerank.
+
+    Frozen/hashable (a jit cache key like every backend). ``stateful``
+    marks the aux protocol for loop drivers: ``build`` produces the
+    :class:`GridAux`, ``__call__`` accepts it via ``aux=`` (or rebuilds
+    when ``None``).
+
+    ``grid_per_axis=None`` derives the resolution from the (static)
+    pool capacity at trace time, targeting O(1) units per occupied
+    cell for 2-manifold data: ``g ~ sqrt(capacity / 2)``. A fixed
+    24-cube — the seed sketch's default — starves recall past ~10k
+    units (hundreds of units per surface cell vs a finite
+    ``per_cell_cap``).
+    """
+
+    grid_per_axis: int | None = None
+    per_cell_cap: int = 24
+    n_anchors: int = 64
+    bbox: tuple | None = None      # ((lo,)*dim, (hi,)*dim) | None=derive
+    fallback: str = "guard"        # "guard" | "anchors" | "exact"
+    recall_target: float | None = None
+
+    stateful = True                # class attr, not a dataclass field
+
+    def __post_init__(self):
+        if self.fallback not in ("guard", "anchors", "exact"):
+            raise ValueError(
+                f"fallback must be 'guard', 'anchors' or 'exact', got "
+                f"{self.fallback!r}")
+        if self.per_cell_cap < 1:
+            raise ValueError(
+                f"per_cell_cap must be >= 1, got {self.per_cell_cap}")
+
+    def dims_for(self, capacity: int) -> tuple:
+        if self.grid_per_axis is not None:
+            g = self.grid_per_axis
+        else:
+            # target ~16 expected units inside the coverage disk of
+            # radius `cell` for 2-manifold data at full occupancy:
+            # g = sqrt(n/16) keeps lambda*pi*cell^2 constant across
+            # capacities, so the guard's false-trigger rate does not
+            # drift with network size
+            g = max(4, min(128, round(math.sqrt(capacity / 16.0))))
+        return (g,) * 3
+
+    def build(self, w: jax.Array, active: jax.Array) -> GridAux:
+        return build_grid(w, active, self.dims_for(w.shape[0]),
+                          bbox=self.bbox)
+
+    def __call__(self, signals: jax.Array, w: jax.Array,
+                 active: jax.Array, aux: GridAux | None = None):
+        if aux is None:
+            aux = self.build(w, active)
+        if self.fallback == "anchors":
+            return grid_search(aux, signals, w, active,
+                               per_cell_cap=self.per_cell_cap,
+                               n_anchors=self.n_anchors)
+        if self.fallback == "guard":
+            return self._guarded(aux, signals, w, active)
+        return self._exact_fallback(aux, signals, w, active)
+
+    def _guarded(self, aux: GridAux, signals: jax.Array,
+                 w: jax.Array, active: jax.Array):
+        """Radius-guarded search: shortlist answers are returned only
+        when provably exact (second distance under one cell width —
+        every unit that close is inside the stencil by construction);
+        otherwise one batch-level cond re-runs the exact reference.
+        The wrong-second failure mode this closes is not cosmetic:
+        SOAM's stable-edge crystallization permanently freezes any
+        spurious winner-second edge, so an unguarded 5% error rate
+        poisons the reconstructed topology beyond repair."""
+        from repro.core.gson.multi import find_winners_reference
+
+        wid, sid, db, ds = grid_search(
+            aux, signals, w, active, per_cell_cap=self.per_cell_cap,
+            n_anchors=self.n_anchors)
+        cell2 = aux.cell * aux.cell
+        ok = (sid != wid) & (ds < cell2)
+
+        def from_grid(_):
+            return wid, sid, db, ds
+
+        def exhaustive(_):
+            return find_winners_reference(signals, w, active)
+
+        return jax.lax.cond(jnp.all(ok), from_grid, exhaustive,
+                            operand=None)
+
+    def _exact_fallback(self, aux: GridAux, signals: jax.Array,
+                        w: jax.Array, active: jax.Array):
+        """The paper's discipline: per-signal exhaustive re-search when
+        the stencil yields < 2 candidates. One shared rerank serves
+        both branches (the seed sketch's duplicated top-k closure is
+        gone)."""
+        from repro.core.gson.multi import find_winners_reference
+
+        def one(sig):
+            wid, sid, db, ds = grid_search(
+                aux, sig[None, :], w, active,
+                per_cell_cap=self.per_cell_cap, n_anchors=0)
+            # < 2 distinct finite candidates in the stencil: the rerank
+            # duplicates the winner (sid == wid) or, on an empty
+            # shortlist, returns the BIG_ID sentinel — either triggers
+            # the paper's exhaustive re-search
+            short_ok = (wid[0] < w.shape[0]) & (sid[0] != wid[0])
+
+            def from_grid(_):
+                return wid[0], sid[0], db[0], ds[0]
+
+            def exhaustive(_):
+                a, b, c, d = find_winners_reference(sig[None, :], w, active)
+                return a[0], b[0], c[0], d[0]
+
+            return jax.lax.cond(short_ok, from_grid, exhaustive,
+                                operand=None)
+
+        return jax.vmap(one)(signals)
+
+
+def grid_find_winners(recall_target: float = 0.95,
+                      grid_per_axis: int | None = None,
+                      n_anchors: int = 64) -> GridFindWinners:
+    """Construct the ``ann-grid`` backend from a recall target: the
+    per-cell candidate cap reuses the birthday shortlist budget (a
+    heuristic here — the closed-form model is exact for the windowed
+    partition only; ``benchmarks/ann_matrix.py`` validates the mapping
+    by measuring achieved recall against the exact backend), floored
+    at 24 so the radius guard's coverage argument is not undercut by
+    bucket overflow at the derived ~16-units-per-disk density."""
+    return GridFindWinners(
+        grid_per_axis=grid_per_axis,
+        per_cell_cap=max(24, min(64, shortlist_size(recall_target, k=2))),
+        n_anchors=n_anchors,
+        fallback="guard",
+        recall_target=recall_target)
+
+
+def indexed_find_winners(grid_per_axis: int = 24,
+                         per_cell_cap: int = 24,
+                         bbox: tuple | None = None) -> GridFindWinners:
+    """The paper's *Indexed* baseline: fixed grid frame + per-signal
+    exhaustive fallback (seed-sketch defaults)."""
+    return GridFindWinners(
+        grid_per_axis=grid_per_axis, per_cell_cap=per_cell_cap,
+        n_anchors=0, bbox=bbox, fallback="exact")
+
+
+@partial(jax.jit, static_argnames=("params", "fw", "rebuild_every",
+                                   "refresh_every"))
+def indexed_scan(
+    state,
+    signals: jax.Array,
+    params,
+    fw: GridFindWinners,
+    rebuild_every: int = 64,
+    refresh_every: int = 50,
+):
+    """Single-signal scan with the grid aux in the loop carry (the
+    ``indexed`` variant's update kernel, absorbed from the seed
+    sketch). The aux is rebuilt (counting sort) every
+    ``rebuild_every`` signals — the batched analogue of the paper's
+    in-Update index maintenance."""
+    from repro.core.gson.multi import (multi_signal_step_impl,
+                                       refresh_topology)
+
+    is_soam = params.model == "soam"
+    aux0 = fw.build(state.w, state.active)
+
+    def body(carry, sig):
+        st, aux, i = carry
+        st = multi_signal_step_impl(st, sig[None, :], params,
+                                    refresh_states=False,
+                                    find_winners=fw, fw_aux=aux)
+        if is_soam:
+            st = jax.lax.cond((i + 1) % refresh_every == 0,
+                              lambda s: refresh_topology(s, params),
+                              lambda s: s, st)
+        aux = jax.lax.cond(
+            (i + 1) % rebuild_every == 0,
+            lambda a: fw.build(st.w, st.active),
+            lambda a: a, aux)
+        return (st, aux, i + 1), None
+
+    (state, _, _), _ = jax.lax.scan(body, (state, aux0, jnp.int32(0)),
+                                    signals)
+    return state

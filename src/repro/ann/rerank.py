@@ -1,0 +1,51 @@
+"""Exact top-2 rerank over a shortlisted candidate set.
+
+The second stage shared by every approximate backend. It implements
+the engine's tie-break contract — identical to
+``multi.find_winners_reference`` and the Pallas kernel's
+``_two_smallest_with_ids``:
+
+  * ties break to the LOWEST unit id among the minima;
+  * the second pass excludes every slot carrying the winner's id (the
+    shortlist may contain duplicates: stencil cells overlap anchors);
+  * invalid slots carry ``inf`` distance;
+  * degenerate rows (< 2 finite candidates) duplicate the winner into
+    the second slot, like the reference.
+
+Given the full candidate set (every unit exactly once, distances from
+the same quadratic expansion), ``exact_top2`` is bitwise identical to
+the reference on ids — the property pinned by ``tests/test_ann.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG_ID = jnp.int32(2 ** 30)   # sentinel above any unit id (same as kernel)
+
+
+def exact_top2(d2: jax.Array, ids: jax.Array):
+    """Row-wise exact top-2 of a candidate set.
+
+    ``d2``: (m, S) f32 squared distances, ``inf`` on invalid slots.
+    ``ids``: (m, S) i32 unit ids (duplicates allowed; invalid slots may
+    carry :data:`BIG_ID`).
+
+    Returns ``(winner_ids, second_ids, d2_winner, d2_second)`` in the
+    ``FindWinnersFn`` result form (distances clamped at 0, degenerate
+    rows duplicate the winner).
+    """
+    m1 = jnp.min(d2, axis=1)
+    is1 = d2 <= m1[:, None]
+    i1 = jnp.min(jnp.where(is1, ids, BIG_ID), axis=1)
+    masked = jnp.where(ids == i1[:, None], jnp.inf, d2)
+    m2 = jnp.min(masked, axis=1)
+    is2 = masked <= m2[:, None]
+    i2 = jnp.min(jnp.where(is2, ids, BIG_ID), axis=1)
+    # degenerate (< 2 finite candidates): duplicate the winner, like the
+    # reference's < 2 active units case
+    invalid = ~jnp.isfinite(m2)
+    i2 = jnp.where(invalid, i1, i2)
+    m2 = jnp.where(invalid, m1, m2)
+    return (i1.astype(jnp.int32), i2.astype(jnp.int32),
+            jnp.maximum(m1, 0.0), jnp.maximum(m2, 0.0))

@@ -250,6 +250,7 @@ def fleet_iterate_impl(
     cfg: SuperstepConfig,
     find_winners: FindWinnersFn | None = None,
     update_phase: UpdatePhaseFn | None = None,
+    fw_aux=None,
 ) -> FleetState:
     """One masked multi-signal iteration for every network in ``mask``.
 
@@ -258,20 +259,33 @@ def fleet_iterate_impl(
     step with the device m-schedule, and (SOAM) refresh the topology
     ladder on the per-network cadence. Networks outside ``mask`` are
     frozen (state, key and counter unchanged).
+
+    ``fw_aux``: optional batched search structure for stateful Find
+    Winners backends (every leaf (B, ...)), carried by
+    :func:`run_fleet_superstep_impl`. ``None`` with a stateful backend
+    rebuilds per call — correct everywhere (this is what the
+    host-dispatched drivers do), just unamortized.
     """
     keys = jax.vmap(jax.random.split)(fstate.rng)              # (B, 2)
     rng, k_sig = keys[:, 0], keys[:, 1]
     signals = sampler(k_sig, cfg.max_parallel)                 # (B, m, dim)
+    stateful = getattr(find_winners, "stateful", False)
+    if stateful and fw_aux is None:
+        fw_aux = jax.vmap(find_winners.build)(fstate.nets.w,
+                                              fstate.nets.active)
 
-    def one(net, sig):
+    def one(net, sig, aux):
         m_t = device_m_schedule(net.n_active, cfg)
         smask = jnp.arange(cfg.max_parallel, dtype=jnp.int32) < m_t
         return multi_signal_step_impl(
             net, sig, params, refresh_states=False,
             find_winners=find_winners, signal_mask=smask,
-            update_phase=update_phase)
+            update_phase=update_phase, fw_aux=aux)
 
-    nets = jax.vmap(one)(fstate.nets, signals)
+    if stateful:
+        nets = jax.vmap(one)(fstate.nets, signals, fw_aux)
+    else:
+        nets = jax.vmap(lambda n, s: one(n, s, None))(fstate.nets, signals)
 
     if params.model == "soam":
         # per-network cadence on the pre-increment global counter, like
@@ -345,20 +359,29 @@ def run_fleet_superstep_impl(
     soon as every network is frozen; ``early_exit=False`` lowers to a
     fixed ``cfg.length``-turn ``lax.scan`` (turns after the whole batch
     froze are no-ops). Both produce bit-identical final states.
+
+    A stateful Find Winners backend (``repro.ann`` grid) gets its
+    batched search structure built once at entry and rebuilt on the
+    ``cfg.refresh_every`` cadence for still-running networks — the
+    fleet analogue of the fused superstep's aux carry.
     """
     steps0 = jnp.zeros((fstate.iteration.shape[0],), jnp.int32)
+    stateful = getattr(find_winners, "stateful", False)
+    aux0 = (jax.vmap(find_winners.build)(fstate.nets.w,
+                                         fstate.nets.active)
+            if stateful else None)
 
     def cond(carry):
-        fs, steps = carry
+        fs, steps, _ = carry
         return jnp.any(~fs.converged & (steps < max_steps))
 
     def body(carry):
-        fs, steps = carry
+        fs, steps, aux = carry
         running = ~fs.converged & (steps < max_steps)
         fs = fleet_iterate_impl(fs, running, sampler=sampler,
                                 params=params, cfg=cfg,
                                 find_winners=find_winners,
-                                update_phase=update_phase)
+                                update_phase=update_phase, fw_aux=aux)
         steps = jnp.where(running, steps + 1, steps)
         # cadence on the post-increment global counter (continuous
         # across superstep calls), like superstep._body
@@ -369,17 +392,29 @@ def run_fleet_superstep_impl(
                                        params=params, cfg=cfg),
             lambda a: a[0],
             (fs, check))
-        return fs, steps
+        if stateful:
+            due = running & (fs.iteration % cfg.refresh_every == 0)
+
+            def rebuild(a):
+                fresh = jax.vmap(find_winners.build)(fs.nets.w,
+                                                     fs.nets.active)
+                return jax.tree.map(
+                    lambda x, y: _where(due, x, y), fresh, a)
+
+            aux = jax.lax.cond(jnp.any(due), rebuild, lambda a: a, aux)
+        return fs, steps, aux
 
     if cfg.early_exit:
-        return jax.lax.while_loop(cond, body, (fstate, steps0))
+        fs, steps, _ = jax.lax.while_loop(cond, body,
+                                          (fstate, steps0, aux0))
+        return fs, steps
 
     def scan_body(carry, _):
         return jax.lax.cond(cond(carry), body, lambda c: c, carry), None
 
-    carry, _ = jax.lax.scan(scan_body, (fstate, steps0), None,
-                            length=cfg.length)
-    return carry
+    (fs, steps, _), _ = jax.lax.scan(scan_body, (fstate, steps0, aux0),
+                                     None, length=cfg.length)
+    return fs, steps
 
 
 def fleet_health_impl(fstate: FleetState) -> jax.Array:

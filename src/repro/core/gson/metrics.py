@@ -6,6 +6,8 @@ the sampled surface — the strongest faithfulness check available.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -66,6 +68,45 @@ def euler_characteristic(state: NetworkState) -> tuple[int, int, int, int]:
 def genus(state: NetworkState) -> float:
     _, _, _, chi = euler_characteristic(state)
     return (2 - chi) / 2.0
+
+
+class TopologyQuality(NamedTuple):
+    """Verdict of :func:`topology_quality` (all host-side scalars)."""
+
+    chi: int              # Euler characteristic of the candidate
+    exact_chi: int        # Euler characteristic of the exact run
+    chi_match: bool
+    qe: float             # candidate quantization error (nan: no probes)
+    exact_qe: float
+    qe_rel: float         # (qe - exact_qe) / exact_qe, signed
+    qe_ok: bool
+    ok: bool              # chi_match and qe_ok
+
+
+def topology_quality(state: NetworkState, exact_state: NetworkState,
+                     probes=None, qe_tol: float = 0.05) -> TopologyQuality:
+    """Quality-not-bitwise acceptance gate for approximate backends.
+
+    An approximate Find Winners backend (``repro.ann``) is accepted
+    when the network it grows is *topologically* as good as the exact
+    backend's: equal Euler characteristic (same reconstructed surface
+    class) and quantization error within ``qe_tol`` of the exact run's
+    — one-sided, since a *lower* QE is never a defect. ``probes=None``
+    skips the QE clause (chi only).
+    """
+    _, _, _, chi = euler_characteristic(state)
+    _, _, _, exact_chi = euler_characteristic(exact_state)
+    chi_match = chi == exact_chi
+    if probes is None:
+        return TopologyQuality(chi, exact_chi, chi_match,
+                               float("nan"), float("nan"), float("nan"),
+                               True, chi_match)
+    qe = float(quantization_error(state, probes))
+    exact_qe = float(quantization_error(exact_state, probes))
+    qe_rel = (qe - exact_qe) / max(exact_qe, 1e-30)
+    qe_ok = qe <= exact_qe * (1.0 + qe_tol)
+    return TopologyQuality(chi, exact_chi, chi_match, qe, exact_qe,
+                           qe_rel, qe_ok, chi_match and qe_ok)
 
 
 def summary(state: NetworkState) -> dict:

@@ -32,7 +32,7 @@ directly testable.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -296,6 +296,7 @@ def multi_signal_step_impl(
     find_winners: FindWinnersFn | None = None,
     signal_mask: jax.Array | None = None,
     update_phase: UpdatePhaseFn | None = None,
+    fw_aux: Any = None,
 ) -> NetworkState:
     """One multi-signal iteration. ``signals``: (m, dim) float32.
 
@@ -314,6 +315,15 @@ def multi_signal_step_impl(
     ``update_phase``: optional ``UpdatePhaseFn`` replacing the dense
     Update phase (``update_phase_reference``) — the second pluggable
     backend axis, e.g. ``repro.kernels.update_phase``'s Pallas suite.
+
+    ``fw_aux``: optional precomputed search structure for *stateful*
+    Find Winners backends (``find_winners.stateful`` is True, e.g. the
+    ``repro.ann`` hash-grid quantizer). Such backends expose
+    ``build(w, active) -> aux`` and accept the result via
+    ``__call__(..., aux=)``; loop drivers (fused superstep, fleet
+    superstep, the indexed scan) carry the aux and rebuild it on the
+    refresh cadence, then pass it here. ``None`` means the backend
+    rebuilds internally — always correct, just unamortized.
     """
     if find_winners is None:
         find_winners = find_winners_reference
@@ -329,7 +339,11 @@ def multi_signal_step_impl(
     rng, k_lock = jax.random.split(state.rng)
 
     # ---- 1. Find Winners -------------------------------------------------
-    wid, sid, d2b, _ = find_winners(signals, state.w, state.active)
+    if fw_aux is not None:
+        wid, sid, d2b, _ = find_winners(signals, state.w, state.active,
+                                        aux=fw_aux)
+    else:
+        wid, sid, d2b, _ = find_winners(signals, state.w, state.active)
 
     # ---- 2-3e. dense Update phase (pluggable backend) --------------------
     up = update_phase(state, signals, wid, sid, d2b, k_lock, params,

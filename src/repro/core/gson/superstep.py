@@ -115,7 +115,8 @@ def device_m_schedule(n_active: jax.Array, cfg: SuperstepConfig) -> jax.Array:
 def _iterate(state: NetworkState, k_sig: jax.Array, it: jax.Array, *,
              sampler, params: GSONParams, cfg: SuperstepConfig,
              find_winners: FindWinnersFn | None,
-             update_phase: UpdatePhaseFn | None = None) -> NetworkState:
+             update_phase: UpdatePhaseFn | None = None,
+             fw_aux=None) -> NetworkState:
     """One fused iteration: sample -> masked multi-signal step -> cond
     topology refresh. ``it`` is the global iteration counter (so the
     refresh cadence is continuous across superstep calls)."""
@@ -125,7 +126,7 @@ def _iterate(state: NetworkState, k_sig: jax.Array, it: jax.Array, *,
     state = multi_signal_step_impl(
         state, signals, params, refresh_states=False,
         find_winners=find_winners, signal_mask=mask,
-        update_phase=update_phase)
+        update_phase=update_phase, fw_aux=fw_aux)
     if params.model == "soam":
         state = jax.lax.cond(
             it % cfg.refresh_every == 0,
@@ -150,11 +151,11 @@ def _convergence_check(state: NetworkState, probes: jax.Array, *,
 
 def _body(carry, probes, it0, *, sampler, params, cfg, find_winners,
           update_phase=None):
-    state, rng, it, done, qe = carry
+    state, rng, it, done, qe, fw_aux = carry
     rng, k_sig = jax.random.split(rng)
     state = _iterate(state, k_sig, it0 + it, sampler=sampler, params=params,
                      cfg=cfg, find_winners=find_winners,
-                     update_phase=update_phase)
+                     update_phase=update_phase, fw_aux=fw_aux)
     it = it + 1
 
     def check(args):
@@ -166,12 +167,22 @@ def _body(carry, probes, it0, *, sampler, params, cfg, find_winners,
     state, done, qe = jax.lax.cond(
         (it0 + it) % cfg.check_every == 0, check, lambda args: args,
         (state, done, qe))
-    return state, rng, it, done, qe
+    if getattr(find_winners, "stateful", False):
+        # stateful Find Winners (repro.ann grid): rebuild the search
+        # structure on the refresh cadence, from the just-updated pool
+        fw_aux = jax.lax.cond(
+            (it0 + it) % cfg.refresh_every == 0,
+            lambda arg: find_winners.build(arg[0].w, arg[0].active),
+            lambda arg: arg[1],
+            (state, fw_aux))
+    return state, rng, it, done, qe, fw_aux
 
 
-def _init_carry(state: NetworkState, rng: jax.Array):
+def _init_carry(state: NetworkState, rng: jax.Array, find_winners):
+    fw_aux = (find_winners.build(state.w, state.active)
+              if getattr(find_winners, "stateful", False) else None)
     return (state, rng, jnp.int32(0), jnp.asarray(False),
-            jnp.float32(jnp.nan))
+            jnp.float32(jnp.nan), fw_aux)
 
 
 @partial(jax.jit,
@@ -209,20 +220,20 @@ def run_superstep(
     body = partial(_body, probes=probes, it0=it0, sampler=sampler,
                    params=params, cfg=cfg, find_winners=find_winners,
                    update_phase=update_phase)
-    carry = _init_carry(state, rng)
+    carry = _init_carry(state, rng, find_winners)
 
     if cfg.early_exit:
         def cond(c):
-            _, _, it, done, _ = c
+            _, _, it, done, _, _ = c
             return (it < cfg.length) & ~done
 
-        state, rng, it, done, qe = jax.lax.while_loop(cond, body, carry)
+        state, rng, it, done, qe, _ = jax.lax.while_loop(cond, body, carry)
         return SuperstepResult(state, rng, it, done, qe, None)
 
     def scan_body(c, _):
         new = jax.lax.cond(c[3], lambda c_: c_, body, c)
         return new, new[0].n_active
 
-    (state, rng, it, done, qe), hist = jax.lax.scan(
+    (state, rng, it, done, qe, _), hist = jax.lax.scan(
         scan_body, carry, None, length=cfg.length)
     return SuperstepResult(state, rng, it, done, qe, hist)

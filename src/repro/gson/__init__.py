@@ -82,7 +82,7 @@ from repro.gson.faults import (DeviceLossError, FaultySampler,
                                poison_network)
 from repro.gson.fleet import FleetSession, FleetSpec, run_fleet
 from repro.gson.registry import (BACKENDS, MODELS, SAMPLERS, VARIANTS,
-                                 Backend, ModelDef, Registry,
+                                 Backend, ModelDef, Registry, ann_backend,
                                  resolve_backend, resolve_model,
                                  resolve_sampler)
 from repro.gson.session import RunStats, Session, run
@@ -100,7 +100,8 @@ __all__ = [
     "MeshSpec", "ModelDef", "MultiConfig", "NetworkState", "Registry",
     "RunSpec", "RunStats", "Runtime", "Session", "SimulatedCrash",
     "SingleConfig", "StepResult", "SuperstepConfig", "VariantStrategy",
-    "check_convergence", "checkpoint_crash", "lowering_failure_backend",
+    "ann_backend", "check_convergence", "checkpoint_crash",
+    "lowering_failure_backend",
     "poison_network", "resolve", "resolve_backend", "resolve_model",
     "resolve_sampler", "resolve_variant", "run", "run_fleet",
 ]

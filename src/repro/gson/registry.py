@@ -189,6 +189,28 @@ def _pallas_update_phase():
     return make_pallas_update_phase()
 
 
+# The ANN backends hash by VALUE (frozen dataclasses), so equal configs
+# are already identical jit keys; the lru_cache just keeps one instance
+# per config like the Pallas adapters above.
+
+@functools.lru_cache(maxsize=None)
+def _ann_windowed(recall_target: float = 0.95):
+    from repro.ann import windowed_find_winners
+    return windowed_find_winners(recall_target)
+
+
+@functools.lru_cache(maxsize=None)
+def _ann_grid(recall_target: float = 0.95):
+    from repro.ann import grid_find_winners
+    return grid_find_winners(recall_target)
+
+
+@functools.lru_cache(maxsize=None)
+def _indexed_find_winners():
+    from repro.ann import indexed_find_winners
+    return indexed_find_winners()
+
+
 BACKENDS: Registry[Callable[[], Backend]] = Registry("backend")
 
 BACKENDS.register("reference", lambda: Backend(
@@ -203,6 +225,36 @@ BACKENDS.register("pallas-update", lambda: Backend(
 BACKENDS.register("pallas-full", lambda: Backend(
     "pallas-full", _pallas_find_winners(), _pallas_update_phase(),
     "Pallas kernels for both hot phases"))
+BACKENDS.register("ann-windowed", lambda: Backend(
+    "ann-windowed", _ann_windowed(), None,
+    "approximate Find Winners: windowed top-1 -> exact top-2 rerank, "
+    "window count from the birthday recall model at recall 0.95"))
+BACKENDS.register("ann-grid", lambda: Backend(
+    "ann-grid", _ann_grid(), None,
+    "approximate Find Winners: hash-grid quantizer -> stencil "
+    "shortlist -> exact rerank, grid rebuilt on the refresh cadence"))
+BACKENDS.register("indexed", lambda: Backend(
+    "indexed", _indexed_find_winners(), None,
+    "the paper's Indexed baseline (Sec. 3.1): hash grid with "
+    "per-signal exhaustive fallback"))
+
+
+def ann_backend(kind: str = "ann-windowed",
+                recall_target: float = 0.95) -> Backend:
+    """A registered-shape ANN :class:`Backend` at a custom recall
+    target (the ``--recall-target`` CLI path). Instances hash by value,
+    so equal targets share jit caches with the registered entries."""
+    if kind == "ann-windowed":
+        fw = _ann_windowed(recall_target)
+    elif kind == "ann-grid":
+        fw = _ann_grid(recall_target)
+    else:
+        raise KeyError(
+            f"ann_backend kind must be 'ann-windowed' or 'ann-grid', "
+            f"got {kind!r}")
+    return Backend(
+        f"{kind}@r{recall_target:g}", fw, None,
+        f"{kind} at recall_target={recall_target:g}")
 
 
 def resolve_backend(backend: str | Any | None) -> Backend:

@@ -42,11 +42,10 @@ from typing import Any, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.ann import GridFindWinners, indexed_scan
 from repro.core.gson import fleet as fleet_core
 from repro.core.gson import metrics
-from repro.core.gson.index import indexed_single_signal_scan
 from repro.core.gson.multi import refresh_topology, soam_converged
 from repro.core.gson.single import single_signal_scan
 from repro.core.gson.state import GSONParams
@@ -307,24 +306,28 @@ class SingleVariant(_HostVariant):
 
 
 class IndexedVariant(_HostVariant):
+    """The paper's Indexed baseline on the ``repro.ann`` grid backend:
+    same hash-grid quantizer the ``indexed``/``ann-grid`` BACKENDS
+    entries use, in its exhaustive-fallback discipline, with the aux
+    rebuilt in the scan carry every ``rebuild_every`` signals."""
+
     name = "indexed"
     config_cls = IndexedConfig
 
     def prepare(self, rt: Runtime) -> None:
-        lo, hi = rt.vcfg.bbox
-        rt.scratch["bbox"] = (np.asarray(lo, np.float32),
-                              np.asarray(hi, np.float32))
+        cfg = rt.vcfg
+        rt.scratch["grid_fw"] = GridFindWinners(
+            grid_per_axis=cfg.grid_per_axis,
+            per_cell_cap=cfg.per_cell_cap,
+            n_anchors=0, bbox=cfg.bbox, fallback="exact")
 
     def _m(self, rt: Runtime, state) -> int:
         return rt.vcfg.chunk
 
     def _update(self, rt: Runtime, state, signals, it: int):
         cfg = rt.vcfg
-        lo, hi = rt.scratch["bbox"]
-        return indexed_single_signal_scan(
-            state, signals, rt.params, lo, hi,
-            grid_per_axis=cfg.grid_per_axis,
-            per_cell_cap=cfg.per_cell_cap,
+        return indexed_scan(
+            state, signals, rt.params, rt.scratch["grid_fw"],
             rebuild_every=cfg.rebuild_every,
             refresh_every=cfg.refresh_every)
 

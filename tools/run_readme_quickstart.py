@@ -1,21 +1,29 @@
 #!/usr/bin/env python
 """Execute the README quickstart verbatim (CI docs job).
 
-Extracts the FIRST fenced ``python`` block from README.md and runs it.
-The README is the onboarding surface — if the snippet drifts from the
-API, this fails before a reader does. Run with ``PYTHONPATH=src``.
+Extracts the FIRST fenced ``python`` block from README.md and runs it,
+then every command line inside fenced ``bash`` blocks tagged with a
+``# ci-smoke`` comment (e.g. the approximate-backend example
+invocation). The README is the onboarding surface — if a snippet
+drifts from the API or the CLI flags, this fails before a reader does.
+Run with ``PYTHONPATH=src``.
 """
 from __future__ import annotations
 
+import os
 import re
+import shlex
+import subprocess
 import sys
 import time
 from pathlib import Path
 
 
 def main() -> int:
-    readme = Path(__file__).resolve().parent.parent / "README.md"
-    m = re.search(r"```python\n(.*?)```", readme.read_text(), re.DOTALL)
+    root = Path(__file__).resolve().parent.parent
+    readme = root / "README.md"
+    text = readme.read_text()
+    m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
     if not m:
         print("FAIL: no ```python block found in README.md")
         return 1
@@ -26,6 +34,26 @@ def main() -> int:
     t0 = time.time()
     exec(compile(snippet, str(readme) + ":quickstart", "exec"), {})
     print(f"--- quickstart OK in {time.time() - t0:.1f}s ---")
+
+    # tagged bash commands: join backslash continuations, keep only
+    # lines whose command carries the ci-smoke marker
+    for block in re.findall(r"```bash\n(.*?)```", text, re.DOTALL):
+        for line in re.sub(r"\\\n\s*", " ", block).splitlines():
+            line = line.strip()
+            if "# ci-smoke" not in line or line.startswith("#"):
+                continue
+            cmd = shlex.split(line.split("# ci-smoke")[0])
+            env = dict(os.environ)
+            while cmd and "=" in cmd[0] and not cmd[0].startswith("="):
+                key, _, val = cmd.pop(0).partition("=")
+                env[key] = val
+            print(f"--- README ci-smoke: {' '.join(cmd)} ---")
+            t0 = time.time()
+            res = subprocess.run(cmd, cwd=root, env=env)
+            if res.returncode != 0:
+                print(f"FAIL: exit {res.returncode}")
+                return 1
+            print(f"--- ci-smoke OK in {time.time() - t0:.1f}s ---")
     return 0
 
 
