@@ -66,6 +66,17 @@ class UpdateOut(NamedTuple):
 # params, signal_mask) -> UpdateOut. Implementations must preserve the
 # winner-lock semantics (one survivor per distinct winner, uniformly
 # random among colliders under k_lock) — see update_phase_reference.
+#
+# The callable is a static jit argument everywhere it threads
+# (multi_signal_step / run_superstep / fleet / mesh programs), so ONE
+# shared instance per configuration is the contract — and because the
+# body runs at trace time, an implementation may specialize on the
+# static shapes it sees (``state.capacity`` = ``w.shape[0]``,
+# ``signals.shape[0]``) while keeping the outer jit keys unchanged.
+# ``repro.gson.autotune.make_autotuned_update_phase`` (the
+# ``pallas-auto`` backend) relies on exactly this: per-shape dispatch
+# to reference / dense-tiled / sparse-slab kernels inside one stable
+# callable.
 UpdatePhaseFn = Callable[..., UpdateOut]
 
 

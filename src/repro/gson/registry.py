@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import warnings
 from typing import Any, Callable, Generic, Iterator, TypeVar
 
@@ -189,6 +190,21 @@ def _pallas_update_phase():
     return make_pallas_update_phase()
 
 
+@functools.lru_cache(maxsize=None)
+def _sparse_update_phase():
+    from repro.kernels.update_phase.sparse import make_sparse_update_phase
+    return make_sparse_update_phase()
+
+
+@functools.lru_cache(maxsize=None)
+def _autotuned_update_phase(table_env: str | None):
+    # memoized per $REPRO_AUTOTUNE_TABLE value: the resolved adapter is
+    # the jit cache key, and an operator override must not silently
+    # reuse a closure that already latched a different table
+    from repro.gson.autotune import make_autotuned_update_phase
+    return make_autotuned_update_phase(table_env)
+
+
 # The ANN backends hash by VALUE (frozen dataclasses), so equal configs
 # are already identical jit keys; the lru_cache just keeps one instance
 # per config like the Pallas adapters above.
@@ -225,6 +241,16 @@ BACKENDS.register("pallas-update", lambda: Backend(
 BACKENDS.register("pallas-full", lambda: Backend(
     "pallas-full", _pallas_find_winners(), _pallas_update_phase(),
     "Pallas kernels for both hot phases"))
+BACKENDS.register("pallas-sparse", lambda: Backend(
+    "pallas-sparse", find_winners_reference, _sparse_update_phase(),
+    "reference Find Winners, winner-neighborhood slab Update: the "
+    "Pallas kernels run on just the unit tiles the batch touches"))
+BACKENDS.register("pallas-auto", lambda: Backend(
+    "pallas-auto", find_winners_reference,
+    _autotuned_update_phase(os.environ.get("REPRO_AUTOTUNE_TABLE")),
+    "shape-autotuned Update: per-(capacity, m) fastest of reference / "
+    "pallas / sparse from the measured selection table "
+    "(repro.gson.autotune)"))
 BACKENDS.register("ann-windowed", lambda: Backend(
     "ann-windowed", _ann_windowed(), None,
     "approximate Find Winners: windowed top-1 -> exact top-2 rerank, "

@@ -103,6 +103,14 @@ class RunSpec:
     per-variant knobs live in ``variant_config`` (``None`` means the
     variant's defaults). ``mesh`` (optional) shards the signal axis of
     the multi-signal step across a device mesh — see :class:`MeshSpec`.
+
+    ``backend`` selects the hot-phase kernels by name (see
+    ``docs/api.md``); ``backend="pallas-auto"`` resolves to ONE shared
+    shape-autotuned Update adapter, so cohort/jit cache keys — which
+    hash the resolved callables, here and in fleet/mesh cohorts — are
+    exactly as stable as for any single-kernel backend while each
+    compiled ``(capacity, m)`` shape runs whatever the measured
+    selection table says is fastest (``repro.gson.autotune``).
     """
 
     variant: str | Any = "multi"

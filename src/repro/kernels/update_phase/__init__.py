@@ -2,10 +2,16 @@
 
 Layout mirrors ``repro.kernels.find_winners``: ``kernel.py`` holds the
 Pallas TPU kernels, ``ops.py`` the jit'd padding/masking wrapper and
-the engine adapter, ``ref.py`` an independent dense oracle. Selected
-per-``RunSpec`` through the BACKENDS registry ("pallas-update" /
-"pallas-full" — see ``repro.gson.registry``).
+the engine adapter, ``ref.py`` an independent dense oracle, and
+``sparse.py`` the winner-neighborhood slab variant that runs the same
+kernels at O(m)-bounded slab capacity. Selected per-``RunSpec``
+through the BACKENDS registry ("pallas-update" / "pallas-full" /
+"pallas-sparse", or shape-autotuned via "pallas-auto" — see
+``repro.gson.registry`` and ``repro.gson.autotune``).
 """
 from repro.kernels.update_phase.ops import (make_pallas_update_phase,
                                             update_phase_op)
 from repro.kernels.update_phase.ref import update_phase_dense
+from repro.kernels.update_phase.sparse import (default_slab_tiles,
+                                               make_sparse_update_phase,
+                                               update_phase_sparse)

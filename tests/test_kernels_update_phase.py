@@ -184,8 +184,8 @@ def test_full_step_with_update_kernel_matches_reference():
 
 
 def test_backend_registry_exposes_update_entries():
-    assert {"reference", "pallas", "pallas-update",
-            "pallas-full"} <= set(gson.BACKENDS.names())
+    assert {"reference", "pallas", "pallas-update", "pallas-full",
+            "pallas-sparse", "pallas-auto"} <= set(gson.BACKENDS.names())
     be = gson.resolve_backend("pallas-update")
     assert isinstance(be, gson.Backend)
     assert be.update_phase is not None

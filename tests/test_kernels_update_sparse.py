@@ -1,0 +1,274 @@
+"""Winner-neighborhood sparse Update kernel vs reference vs dense oracle.
+
+The sparse path (``kernels/update_phase/sparse.py``) gathers only the
+unit tiles touched by the batch — winners, seconds, and winners'
+neighborhoods — runs the same three Pallas kernels on that slab, and
+scatters back. Parity policy matches ``test_kernels_update_phase.py``:
+discrete fields (``selected`` / ``adapt`` / ``ins`` / ``age``) bitwise,
+float fields within 1e-6, GNG ``error`` bitwise (single contributor per
+post-lock winner). The guard (``n_touched > slab budget``) falls back
+to the dense tiled path, so every input shape is exact regardless of
+which branch runs — the deterministic sweep pins both branches and the
+hypothesis sweep (CI-only; skipped when hypothesis is absent) fuzzes
+shapes, duplicate-winner pressure, masked rows, and collision modes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro import gson
+from repro.core.gson.multi import (find_winners_reference,
+                                   multi_signal_step_impl,
+                                   update_phase_reference)
+from repro.core.gson.sampling import make_sampler
+from repro.core.gson.state import GSONParams, init_state
+from repro.kernels.update_phase.ref import update_phase_dense
+from repro.kernels.update_phase.sparse import (default_slab_tiles,
+                                               make_sparse_update_phase,
+                                               update_phase_sparse)
+
+W_TOL = dict(rtol=1e-6, atol=1e-7)
+
+
+def grown_state(model: str, capacity=512, units=2, max_deg=12, iters=20,
+                m=32, surface="torus", seed=0):
+    """A state with ``units`` seeded rows and ``iters`` reference steps
+    of edge growth (aging parity is vacuous on an edgeless network)."""
+    p = GSONParams(model=model, insertion_threshold=0.3)
+    sampler = make_sampler(surface)
+    st = init_state(jax.random.key(seed), capacity=capacity, dim=3,
+                    max_deg=max_deg,
+                    seed_points=sampler(jax.random.key(seed + 1), units))
+    rng = jax.random.key(seed + 7)
+    for i in range(iters):
+        rng, k = jax.random.split(rng)
+        st = multi_signal_step_impl(st, sampler(k, m), p,
+                                    refresh_states=(i % 5 == 0))
+    return p, sampler, st, rng
+
+
+def phase_inputs(p, sampler, st, rng, m=32, masked=None):
+    rng, k = jax.random.split(rng)
+    sig = sampler(k, m)
+    _, k_lock = jax.random.split(st.rng)
+    wid, sid, d2b, _ = find_winners_reference(sig, st.w, st.active)
+    mask = None
+    if masked is not None:
+        mask = jnp.arange(m) < masked
+    return sig, wid, sid, d2b, k_lock, mask
+
+
+def assert_update_out_close(ref, got, *, err_exact: bool, tag: str):
+    np.testing.assert_array_equal(np.asarray(ref.selected),
+                                  np.asarray(got.selected), f"{tag} selected")
+    np.testing.assert_array_equal(np.asarray(ref.adapt),
+                                  np.asarray(got.adapt), f"{tag} adapt")
+    np.testing.assert_array_equal(np.asarray(ref.ins),
+                                  np.asarray(got.ins), f"{tag} ins")
+    np.testing.assert_array_equal(np.asarray(ref.age),
+                                  np.asarray(got.age), f"{tag} age")
+    np.testing.assert_allclose(np.asarray(ref.w), np.asarray(got.w),
+                               err_msg=f"{tag} w", **W_TOL)
+    np.testing.assert_allclose(np.asarray(ref.firing),
+                               np.asarray(got.firing),
+                               err_msg=f"{tag} firing", **W_TOL)
+    if err_exact:
+        np.testing.assert_array_equal(np.asarray(ref.error),
+                                      np.asarray(got.error), f"{tag} error")
+    else:
+        np.testing.assert_allclose(np.asarray(ref.error),
+                                   np.asarray(got.error),
+                                   err_msg=f"{tag} error", **W_TOL)
+
+
+def test_default_slab_tiles_budget():
+    # 2m touched rows ceil-divided into tiles, clamped to [1, n_tiles]
+    assert default_slab_tiles(32, 128, 8) == 1
+    assert default_slab_tiles(128, 128, 8) == 2
+    assert default_slab_tiles(4096, 128, 8) == 8
+    assert default_slab_tiles(1, 128, 8) == 1
+
+
+@pytest.mark.parametrize("model", ["soam", "gwr", "gng"])
+def test_sparse_parity_all_models(model):
+    """The slab path (guard passes: cap=512, m=32, 128-wide tiles)
+    against both the reference and the dense oracle."""
+    p, sampler, st, rng = grown_state(model)
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng)
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p)
+    spa = update_phase_sparse(st, sig, wid, sid, d2b, k_lock, p,
+                              block_c=128, interpret=True)
+    den = update_phase_dense(st, sig, wid, sid, d2b, k_lock, p)
+    assert_update_out_close(ref, spa, err_exact=(model == "gng"),
+                            tag=f"{model} sparse")
+    assert_update_out_close(ref, den, err_exact=(model == "gng"),
+                            tag=f"{model} dense")
+
+
+@pytest.mark.parametrize("cap,units,m,bc,slab", [
+    (300, 2, 48, 128, None),     # misaligned capacity, slab path
+    (520, 2, 37, 128, 2),        # everything misaligned, tight budget
+    (100, 2, 1, 256, None),      # single signal, one tile (dense path)
+    (512, 2, 64, 128, 1),        # guard fires -> dense fallback
+    (2176, 64, 64, 256, None),   # big pool, modest batch (the regime)
+])
+def test_sparse_shape_sweep(cap, units, m, bc, slab):
+    p, sampler, st, rng = grown_state("gwr", capacity=cap, units=units,
+                                      iters=10)
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng, m=m)
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p)
+    spa = update_phase_sparse(st, sig, wid, sid, d2b, k_lock, p,
+                              block_c=bc, slab_tiles=slab, interpret=True)
+    assert_update_out_close(ref, spa, err_exact=False,
+                            tag=f"cap={cap} m={m} slab={slab}")
+
+
+def test_duplicate_winner_pressure():
+    """Many signals, few units: every unit is won repeatedly, the
+    touched-tile set is tiny, and post-lock survivors must match the
+    reference exactly (the slab remap must not merge or split ids)."""
+    p, sampler, st, rng = grown_state("gwr", capacity=640, units=2,
+                                      iters=8, m=16)
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng,
+                                                 m=256)
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p)
+    spa = update_phase_sparse(st, sig, wid, sid, d2b, k_lock, p,
+                              block_c=128, slab_tiles=2, interpret=True)
+    sel = np.asarray(spa.selected)
+    winners = np.asarray(wid)[sel]
+    assert len(winners) == len(set(winners.tolist()))
+    assert_update_out_close(ref, spa, err_exact=False, tag="dup-winners")
+
+
+def test_masked_rows_are_inert():
+    p, sampler, st, rng = grown_state("soam", capacity=300)
+    sig, wid, sid, d2b, k_lock, mask = phase_inputs(p, sampler, st, rng,
+                                                    m=48, masked=17)
+    ref = update_phase_reference(st, sig, wid, sid, d2b, k_lock, p, mask)
+    spa = update_phase_sparse(st, sig, wid, sid, d2b, k_lock, p, mask,
+                              block_c=128, interpret=True)
+    assert not np.any(np.asarray(spa.selected)[17:])
+    assert_update_out_close(ref, spa, err_exact=False, tag="masked")
+
+
+def test_last_collision_mode_raises():
+    p, sampler, st, rng = grown_state("gwr", iters=5)
+    p = GSONParams(model="gwr", neighbor_collision="last")
+    sig, wid, sid, d2b, k_lock, _ = phase_inputs(p, sampler, st, rng)
+    with pytest.raises(NotImplementedError, match="last"):
+        update_phase_sparse(st, sig, wid, sid, d2b, k_lock, p,
+                            interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (runs in CI where the extra is installed; each
+# example builds a short-grown state, so examples stay few and small)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_property_sparse_parity(data):
+    model = data.draw(st.sampled_from(["soam", "gwr", "gng"]),
+                      label="model")
+    capacity = data.draw(st.sampled_from([40, 100, 260, 520, 1030, 2176]),
+                         label="capacity")
+    units = data.draw(st.integers(2, min(96, capacity // 2)),
+                      label="units")
+    m = data.draw(st.integers(1, 96), label="m")
+    block_c = data.draw(st.sampled_from([128, 256]), label="block_c")
+    slab = data.draw(st.sampled_from([None, 1, 2, 4]), label="slab")
+    masked = data.draw(st.one_of(st.none(), st.integers(0, m)),
+                       label="masked")
+    collision = data.draw(st.sampled_from(["sum", "last"]),
+                          label="collision")
+    p, sampler, st_, rng = grown_state(model, capacity=capacity,
+                                       units=units, iters=6, m=16,
+                                       seed=data.draw(
+                                           st.integers(0, 2 ** 16),
+                                           label="seed"))
+    sig, wid, sid, d2b, k_lock, mask = phase_inputs(
+        p, sampler, st_, rng, m=m, masked=masked)
+    if collision == "last":
+        p = GSONParams(model=model, neighbor_collision="last")
+        with pytest.raises(NotImplementedError, match="last"):
+            update_phase_sparse(st_, sig, wid, sid, d2b, k_lock, p, mask,
+                                block_c=block_c, slab_tiles=slab,
+                                interpret=True)
+        return
+    ref = update_phase_reference(st_, sig, wid, sid, d2b, k_lock, p, mask)
+    spa = update_phase_sparse(st_, sig, wid, sid, d2b, k_lock, p, mask,
+                              block_c=block_c, slab_tiles=slab,
+                              interpret=True)
+    tag = (f"{model} cap={capacity} u={units} m={m} bc={block_c} "
+           f"slab={slab} masked={masked}")
+    assert_update_out_close(ref, spa, err_exact=(model == "gng"), tag=tag)
+    if capacity <= 640:   # dense oracle materializes (m, K, C)
+        den = update_phase_dense(st_, sig, wid, sid, d2b, k_lock, p, mask)
+        assert_update_out_close(ref, den, err_exact=(model == "gng"),
+                                tag=tag + " dense")
+
+
+# ---------------------------------------------------------------------------
+# registry + fleet contract
+
+
+def test_backend_registry_exposes_sparse_and_auto():
+    assert {"pallas-sparse", "pallas-auto"} <= set(gson.BACKENDS.names())
+    be = gson.resolve_backend("pallas-sparse")
+    assert be.update_phase is not None
+    # shared adapter instance: stable jit cache key across resolutions
+    assert gson.resolve_backend("pallas-sparse").update_phase \
+        is be.update_phase
+    auto = gson.resolve_backend("pallas-auto")
+    assert auto.update_phase is not None
+    assert gson.resolve_backend("pallas-auto").update_phase \
+        is auto.update_phase
+    assert auto.update_phase is not be.update_phase
+
+
+def test_fleet_b4_sparse_parity():
+    """B=4 fleet on a sparse-update backend tracks the same-seed B=1
+    session (discrete bitwise, floats at ulp — the
+    ``test_kernels_update_phase.py`` fleet contract) and the reference
+    fleet at ulp. A 2-tile slab budget on a 384-wide pool makes early
+    iterations take the slab branch and later ones the dense fallback,
+    so the trajectory crosses the guard both ways under vmap."""
+    backend = gson.Backend(
+        "sparse-test", find_winners_reference,
+        make_sparse_update_phase(block_c=128, slab_tiles=2),
+        "sparse update at a deliberately tight slab budget")
+    cfg = gson.FusedConfig(superstep=gson.SuperstepConfig(length=10))
+    spec = gson.RunSpec(variant="multi-fused", model="gwr",
+                        sampler="sphere", backend=backend, capacity=384,
+                        max_deg=12, max_iterations=10, check_every=5,
+                        qe_threshold=1e-4, n_probe=256,
+                        variant_config=cfg)
+    seeds = range(4)
+    fleet_s = gson.run_fleet(gson.FleetSpec.broadcast(spec, seeds=seeds))
+    for i, seed in enumerate(seeds):
+        st_i, _ = gson.run(spec, seed=seed)
+        st_f = fleet_s[i][0]
+        np.testing.assert_array_equal(np.asarray(st_f.age),
+                                      np.asarray(st_i.age))
+        np.testing.assert_array_equal(np.asarray(st_f.nbr),
+                                      np.asarray(st_i.nbr))
+        for field in ("w", "firing", "error"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(st_f, field)),
+                np.asarray(getattr(st_i, field)),
+                err_msg=f"fleet net {i} {field}", **W_TOL)
+    fleet_r = gson.run_fleet(gson.FleetSpec.broadcast(
+        spec.replace(backend="reference"), seeds=seeds))
+    for i in range(4):
+        st_s, st_r = fleet_s[i][0], fleet_r[i][0]
+        np.testing.assert_array_equal(np.asarray(st_s.nbr),
+                                      np.asarray(st_r.nbr))
+        assert int(st_s.n_active) == int(st_r.n_active)
+        np.testing.assert_allclose(np.asarray(st_s.w),
+                                   np.asarray(st_r.w),
+                                   rtol=1e-5, atol=1e-6)
